@@ -1,0 +1,68 @@
+"""Provisioning advisor — the paper's §V framework as a CLI.
+
+Given a workload (size, throughput, locality, block size, latency SLO)
+and a platform, reports viability (T_B/T_S/T_C), the economics-optimal
+DRAM capacity, and a concrete upgrade recommendation.
+
+  PYTHONPATH=src python examples/provision_advisor.py \\
+      --platform gpu --l-blk 512 --throughput-gbs 200 --tail-us 13
+"""
+import argparse
+import sys
+import pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import (CPU_PLATFORM, GPU_PLATFORM, LatencyTargets,
+                        LogNormalWorkload, analyze_platform)
+from repro.core import units
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--platform", choices=("cpu", "gpu"), default="gpu")
+    ap.add_argument("--l-blk", type=int, default=512)
+    ap.add_argument("--throughput-gbs", type=float, default=200.0)
+    ap.add_argument("--n-blocks", type=float, default=1e9)
+    ap.add_argument("--sigma", type=float, default=1.0,
+                    help="access-interval lognormal spread (locality)")
+    ap.add_argument("--tail-us", type=float, default=13.0)
+    ap.add_argument("--dram-gb", type=float, default=0.0,
+                    help="fixed DRAM capacity (0 = provision freely)")
+    args = ap.parse_args()
+
+    plat = GPU_PLATFORM if args.platform == "gpu" else CPU_PLATFORM
+    if args.dram_gb:
+        import dataclasses
+        plat = dataclasses.replace(plat, c_dram_total=args.dram_gb * 1e9)
+    wl = LogNormalWorkload.from_total_throughput(
+        throughput=args.throughput_gbs * 1e9, sigma=args.sigma,
+        n_blk=args.n_blocks, l_blk=args.l_blk)
+    rep = analyze_platform(plat, wl, args.l_blk,
+                           LatencyTargets(tail=args.tail_us * 1e-6))
+
+    print(f"workload: {units.human_bytes(wl.total_bytes)} across "
+          f"{args.n_blocks:.0e} x {args.l_blk}B blocks, "
+          f"{args.throughput_gbs:.0f} GB/s aggregate, sigma={args.sigma}")
+    print(f"platform: {plat.name}, {plat.n_ssd} SSDs, host budget "
+          f"{units.human_rate(plat.iops_proc)}, DRAM BW "
+          f"{units.human_bytes(plat.b_dram_total)}/s")
+    print()
+    print(f"  usable SSD IOPS : {units.human_rate(rep.iops_ssd_usable)}"
+          f"/SSD (rho_max={rep.rho_max:.2f}"
+          + (", host-limited" if rep.host_limited else "") + ")")
+    print(f"  break-even tau  : {units.human_time(rep.tau_break_even)}")
+    print(f"  T_B / T_S / T_C : {units.human_time(rep.th.t_b)} / "
+          f"{units.human_time(rep.th.t_s)} / "
+          f"{units.human_time(rep.th.t_c)}")
+    print(f"  DRAM for viable : {units.human_bytes(rep.c_dram_viable)}")
+    print(f"  DRAM for optimal: {units.human_bytes(rep.c_dram_optimal)}")
+    print(f"  DRAM BW at opt  : "
+          f"{units.human_bytes(rep.dram_bw_use_optimal)}/s")
+    print()
+    print(f"  VERDICT: {rep.verdict}")
+    print(f"  ADVICE : {rep.recommendation}")
+
+
+if __name__ == "__main__":
+    main()

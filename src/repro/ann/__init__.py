@@ -1,0 +1,1 @@
+from . import corpus, model, progressive  # noqa

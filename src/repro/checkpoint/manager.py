@@ -1,0 +1,171 @@
+"""Tier-aware, fault-tolerant checkpoint manager.
+
+Design (deployment-grade semantics, single-node I/O here):
+  * atomic commits: write to `step_XXXX.tmp/`, fsync, manifest with
+    per-leaf SHA-256 checksums, then a single atomic rename — a crash
+    mid-save can never corrupt the restore set,
+  * elastic restore: leaves are saved as full logical arrays with their
+    pytree paths; restore re-shards onto *any* mesh via device_put with
+    the target shardings (save on mesh A, restore on mesh B),
+  * tiering: the paper's break-even policy decides which checkpoints stay
+    on the fast tier — the newest k (reuse interval ~ restart time) in
+    `dram/`, older ones demoted to `flash/` (cheap capacity, the paper's
+    "active flash tier" for archival state); demotion is a rename, and
+    restore transparently searches both tiers,
+  * keep-policy GC with never-delete-last semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+import shutil
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# exotic dtype -> (real dtype, same-width storage dtype) for npy round-trips
+_EXOTIC = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    root: str
+    keep: int = 3                 # total checkpoints retained
+    fast_tier_keep: int = 1       # newest k stay on the fast tier
+    verify_on_restore: bool = True
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def _sha256(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+class CheckpointManager:
+    def __init__(self, cfg: CheckpointConfig):
+        self.cfg = cfg
+        self.root = pathlib.Path(cfg.root)
+        (self.root / "dram").mkdir(parents=True, exist_ok=True)
+        (self.root / "flash").mkdir(parents=True, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None):
+        """Blocking save with atomic commit. Returns the final path."""
+        leaves, _ = _flatten(tree)
+        tmp = self.root / "dram" / f"step_{step:08d}.tmp"
+        final = self.root / "dram" / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "created": time.time(),
+                    "extra": extra or {}, "leaves": {}}
+        for key, leaf in leaves.items():
+            arr = np.asarray(jax.device_get(leaf))
+            fname = hashlib.md5(key.encode()).hexdigest()[:16] + ".npy"
+            true_dtype = str(arr.dtype)
+            if true_dtype in _EXOTIC:        # bf16 etc: store as raw bits
+                np.save(tmp / fname, arr.view(_EXOTIC[true_dtype][1]))
+            else:
+                np.save(tmp / fname, arr)
+            manifest["leaves"][key] = {
+                "file": fname, "shape": list(arr.shape),
+                "dtype": true_dtype, "sha256": _sha256(arr),
+            }
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)            # atomic commit
+        self._gc()
+        return final
+
+    # ------------------------------------------------------------------ load
+    def _all_checkpoints(self) -> List[pathlib.Path]:
+        out = []
+        for tier in ("dram", "flash"):
+            out += [p for p in (self.root / tier).glob("step_*")
+                    if p.is_dir() and not p.name.endswith(".tmp")
+                    and (p / "manifest.json").exists()]
+        return sorted(out, key=lambda p: int(p.name.split("_")[1]))
+
+    def latest_step(self) -> Optional[int]:
+        cps = self._all_checkpoints()
+        return int(cps[-1].name.split("_")[1]) if cps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of `template`. With `shardings`
+        (a matching pytree of NamedShardings) arrays are placed directly
+        onto the target mesh — this is the elastic re-mesh path."""
+        cps = self._all_checkpoints()
+        if not cps:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        if step is None:
+            path = cps[-1]
+        else:
+            match = [p for p in cps if int(p.name.split("_")[1]) == step]
+            if not match:
+                raise FileNotFoundError(f"step {step} not found")
+            path = match[0]
+        manifest = json.loads((path / "manifest.json").read_text())
+
+        leaves, treedef = _flatten(template)
+        shard_leaves = _flatten(shardings)[0] if shardings is not None \
+            else {}
+        restored = {}
+        for key, leaf in leaves.items():
+            meta = manifest["leaves"].get(key)
+            if meta is None:
+                raise KeyError(f"leaf {key!r} missing from checkpoint")
+            arr = np.load(path / meta["file"])
+            if meta["dtype"] in _EXOTIC:
+                arr = arr.view(_EXOTIC[meta["dtype"]][0])
+            if self.cfg.verify_on_restore:
+                if _sha256(arr) != meta["sha256"]:
+                    raise IOError(f"checksum mismatch for {key!r} "
+                                  f"in {path.name} (corrupt checkpoint)")
+            sh = shard_leaves.get(key)
+            restored[key] = jax.device_put(arr, sh) if sh is not None \
+                else jax.numpy.asarray(arr)
+        ordered = [restored[k] for k in leaves.keys()]
+        return jax.tree_util.tree_unflatten(treedef, ordered), \
+            manifest["extra"]
+
+    # ------------------------------------------------------------ tiering/gc
+    def _gc(self):
+        cps = self._all_checkpoints()
+        # demote beyond fast_tier_keep
+        dram = [p for p in cps if p.parent.name == "dram"]
+        for p in dram[:-self.cfg.fast_tier_keep or None]:
+            dst = self.root / "flash" / p.name
+            if not dst.exists():
+                os.replace(p, dst)
+        # delete beyond keep (oldest first, never the newest)
+        cps = self._all_checkpoints()
+        while len(cps) > max(self.cfg.keep, 1):
+            shutil.rmtree(cps[0])
+            cps = self._all_checkpoints()
+
+    def tier_of(self, step: int) -> Optional[str]:
+        for p in self._all_checkpoints():
+            if int(p.name.split("_")[1]) == step:
+                return p.parent.name
+        return None

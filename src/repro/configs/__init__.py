@@ -1,0 +1,34 @@
+"""Architecture registry: the 10 assigned architectures (+ reduced smoke
+variants) and the per-arch input-shape sets."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from ..models.config import ModelConfig
+
+ARCHS = (
+    "qwen3-moe-235b-a22b",
+    "llama4-maverick-400b-a17b",
+    "xlstm-350m",
+    "deepseek-7b",
+    "granite-20b",
+    "gemma-2b",
+    "mistral-nemo-12b",
+    "whisper-medium",
+    "qwen2-vl-2b",
+    "zamba2-7b",
+)
+
+_MOD = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    if name not in _MOD:
+        raise KeyError(f"unknown arch {name!r}; known: {list(_MOD)}")
+    mod = importlib.import_module(f".{_MOD[name]}", __package__)
+    return mod.reduced() if reduced else mod.config()
+
+
+def all_configs(reduced: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, reduced) for a in ARCHS}

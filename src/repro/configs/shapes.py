@@ -1,0 +1,116 @@
+"""Assigned input shapes and abstract input specs per (arch x shape) cell.
+
+  train_4k     seq_len=4096    global_batch=256   -> train_step
+  prefill_32k  seq_len=32768   global_batch=32    -> prefill
+  decode_32k   seq_len=32768   global_batch=128   -> decode (1 new token,
+                                                     KV cache of seq_len)
+  long_500k    seq_len=524288  global_batch=1     -> decode; requires a
+                                                     sub-quadratic arch
+
+All specs are ShapeDtypeStructs (no allocation) — the same pattern the
+dry-run uses to lower+compile every cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as model_lib
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str                        # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if the cell runs; otherwise why it is skipped."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full-attention arch: 524288-token dense attention is "
+                "quadratic; long_500k assigned to SSM/hybrid archs only")
+    return None
+
+
+def _mrope(cfg: ModelConfig) -> bool:
+    return any(s.kind == "attn" and s.rope == "mrope"
+               for _, _, _, s in cfg.sublayers())
+
+
+def _seq_split(cfg: ModelConfig, seq: int):
+    """(vision_seq, text_seq) for VLM inputs; (0, seq) otherwise."""
+    if cfg.modality != "vlm":
+        return 0, seq
+    sv = int(seq * cfg.vision_frac) // 8 * 8
+    return sv, seq - sv
+
+
+def token_inputs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for a full-sequence step (train / prefill)."""
+    B, S = shape.global_batch, shape.seq_len
+    sv, st = _seq_split(cfg, S)
+    out = {"tokens": jax.ShapeDtypeStruct((B, st), jnp.int32)}
+    if cfg.modality == "vlm":
+        out["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, sv, cfg.d_model), jnp.bfloat16)
+        out["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    elif _mrope(cfg):
+        out["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    if cfg.encoder is not None:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    """Abstract KV/state cache for serving cells (no allocation)."""
+    return jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, batch, max_len, dtype))
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeSpec,
+                  kv_dtype=jnp.bfloat16):
+    """(token, cache, index) abstract inputs for one decode step with a
+    filled cache of length seq_len."""
+    B = shape.global_batch
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    cache = cache_specs(cfg, B, shape.seq_len, dtype=kv_dtype)
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    return token, cache, index
+
+
+def concrete_batch(cfg: ModelConfig, batch: int, seq: int, key=None):
+    """Small *concrete* batch for smoke tests / examples."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    sv, st = _seq_split(cfg, seq)
+    out = {"tokens": jax.random.randint(ks[0], (batch, st), 0, cfg.vocab)}
+    if cfg.modality == "vlm":
+        out["vision_embeds"] = jax.random.normal(
+            ks[1], (batch, sv, cfg.d_model), jnp.bfloat16) * 0.02
+        import numpy as np
+        pos = np.broadcast_to(np.arange(seq)[None], (batch, seq))
+        out["positions"] = jnp.asarray(
+            np.broadcast_to(pos[None], (3, batch, seq)))
+    if cfg.encoder is not None:
+        out["frames"] = jax.random.normal(
+            ks[2], (batch, cfg.encoder.n_frames, cfg.d_model),
+            jnp.bfloat16) * 0.02
+    return out

@@ -1,0 +1,84 @@
+"""Calibrated economic break-even model (paper §III-A, Eq. 1) plus the
+classical Gray/Putzolu form it reduces to.
+
+Costs are normalized to the NAND-die cost (Table III). Host DRAM cost and
+bandwidth/capacity are per-die figures; the break-even interval only depends
+on the per-die ratios, so totals are not needed here (they enter the
+feasibility analysis in platform.py instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .ssd_model import SsdConfig, iops_ssd_peak
+
+
+@dataclasses.dataclass(frozen=True)
+class HostConfig:
+    """Host-side cost/performance parameters (paper Table III row)."""
+
+    name: str
+    alpha_h_dram: float       # normalized cost per host-DRAM die
+    b_h_dram_die: float       # bandwidth per DRAM die (B/s)
+    c_h_dram_die: float       # capacity per DRAM die (bytes)
+    alpha_core: float         # normalized cost per core / SM
+    iops_core: float          # sustainable IOPS per core / SM
+
+
+CPU_DDR = HostConfig("CPU+DDR", alpha_h_dram=1.0, b_h_dram_die=3e9,
+                     c_h_dram_die=3e9, alpha_core=4.0, iops_core=1e6)
+GPU_GDDR = HostConfig("GPU+GDDR", alpha_h_dram=2.0, b_h_dram_die=80e9,
+                      c_h_dram_die=2e9, alpha_core=3.0, iops_core=4e6)
+
+
+def break_even_components(host: HostConfig, l_blk, ssd_cost, iops_ssd):
+    """Per-term contributions to the break-even interval, in seconds.
+
+    Returns dict with 'host', 'dram_bw', 'ssd' components; their sum is the
+    calibrated break-even interval (Eq. 1).
+    """
+    l_blk = jnp.asarray(l_blk, dtype=jnp.float64)
+    # $ per I/O for each resource
+    c_host_io = host.alpha_core / host.iops_core
+    c_dram_io = l_blk * host.alpha_h_dram / host.b_h_dram_die
+    c_ssd_io = jnp.asarray(ssd_cost, jnp.float64) / jnp.asarray(
+        iops_ssd, jnp.float64)
+    # DRAM rent rate: $ per second to hold the block resident
+    rent_rate = l_blk * host.alpha_h_dram / host.c_h_dram_die
+    return {
+        "host": c_host_io / rent_rate,
+        "dram_bw": c_dram_io / rent_rate,
+        "ssd": c_ssd_io / rent_rate,
+    }
+
+
+def break_even(host: HostConfig, l_blk, ssd_cost, iops_ssd):
+    """Calibrated break-even interval tau_be (seconds), Eq. 1."""
+    c = break_even_components(host, l_blk, ssd_cost, iops_ssd)
+    return c["host"] + c["dram_bw"] + c["ssd"]
+
+
+def break_even_for_ssd(host: HostConfig, ssd: SsdConfig, l_blk,
+                       gamma_rw=9.0, phi_wa=3.0, iops_ssd=None):
+    """Break-even using the first-principles device model for the SSD term.
+
+    iops_ssd overrides the peak (e.g. a feasibility-capped usable IOPS from
+    constraints.py).
+    """
+    if iops_ssd is None:
+        iops_ssd = iops_ssd_peak(ssd, l_blk, gamma_rw, phi_wa)
+    return break_even(host, l_blk, ssd.cost, iops_ssd)
+
+
+def classical_break_even(l_blk, ssd_cost, iops_ssd, dram_cost_per_byte):
+    """Gray's economics-only rule: T = C_ssd_io / C_dram_page.
+
+    With host terms dropped and peak IOPS assumed, Eq. 1 reduces to this.
+    dram_cost_per_byte is in the same normalized units as ssd_cost.
+    """
+    c_ssd_io = jnp.asarray(ssd_cost, jnp.float64) / jnp.asarray(
+        iops_ssd, jnp.float64)
+    c_dram_page = jnp.asarray(l_blk, jnp.float64) * dram_cost_per_byte
+    return c_ssd_io / c_dram_page

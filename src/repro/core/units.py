@@ -1,0 +1,70 @@
+"""Unit helpers and hardware constants used across the framework.
+
+All cost terms are normalized to the cost of one NAND die (= 1.0), following
+the paper's Table III normalization.  All times are seconds, sizes bytes,
+rates per-second.
+"""
+from __future__ import annotations
+
+# ---- sizes ----------------------------------------------------------------
+KiB = 1024
+MiB = 1024 * KiB
+GiB = 1024 * MiB
+TiB = 1024 * GiB
+
+KB = 1000
+MB = 1000 * KB
+GB = 1000 * MB
+TB = 1000 * GB
+
+# ---- times ----------------------------------------------------------------
+NS = 1e-9
+US = 1e-6
+MS = 1e-3
+
+# ---- rates ----------------------------------------------------------------
+M_IOPS = 1e6
+G_IOPS = 1e9
+
+# ---- TPU v5e-class roofline constants (target hardware; CPU is the host of
+# record for the dry-run container) ------------------------------------------
+TPU_PEAK_FLOPS_BF16 = 197e12   # per chip
+TPU_HBM_BW = 819e9             # bytes/s per chip
+TPU_ICI_BW = 50e9              # bytes/s per link (per direction)
+
+SECONDS_PER_MINUTE = 60.0
+
+
+def human_time(seconds: float) -> str:
+    """Render a duration compactly (ns/us/ms/s/min)."""
+    s = float(seconds)
+    if s == float("inf"):
+        return "inf"
+    if s < 1e-6:
+        return f"{s * 1e9:.1f}ns"
+    if s < 1e-3:
+        return f"{s * 1e6:.1f}us"
+    if s < 1.0:
+        return f"{s * 1e3:.1f}ms"
+    if s < 120.0:
+        return f"{s:.2f}s"
+    return f"{s / 60.0:.1f}min"
+
+
+def human_bytes(n: float) -> str:
+    n = float(n)
+    for unit, width in ((TiB, "TiB"), (GiB, "GiB"), (MiB, "MiB"), (KiB, "KiB")):
+        if n >= unit:
+            return f"{n / unit:.2f}{width}"
+    return f"{n:.0f}B"
+
+
+def human_rate(iops: float) -> str:
+    iops = float(iops)
+    if iops >= 1e9:
+        return f"{iops / 1e9:.2f}G IOPS"
+    if iops >= 1e6:
+        return f"{iops / 1e6:.1f}M IOPS"
+    if iops >= 1e3:
+        return f"{iops / 1e3:.1f}K IOPS"
+    return f"{iops:.0f} IOPS"

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the compute hot spots, each with a jit'd wrapper
+(ops.py) and a pure-jnp oracle (ref.py). Kernels target TPU BlockSpec/VMEM
+tiling and are validated on CPU in interpret mode."""

@@ -1,0 +1,100 @@
+"""Fused L2-distance + running top-k kernel (stage 1 of the paper's
+two-stage progressive ANN search, §VII-B).
+
+Grid = (n_query_blocks, n_corpus_tiles) with the corpus axis sequential.
+Each step computes the [bq, tile] squared-L2 distances to one corpus tile
+entirely in VMEM (matmul on the MXU + norm terms) and folds them into a
+running top-k scratch via K rounds of masked arg-min extraction — the full
+[Q, N] distance matrix never touches HBM, which is the point: at
+N = 8B vectors (the paper's corpus) that matrix is unmaterializable.
+
+K is small (<= 64); extraction cost K * bq * (tile + K) flops is noise
+next to the bq x tile x D matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 1e30
+
+
+def _ann_kernel(q_ref, c_ref, od_ref, oi_ref, d_scr, i_scr, *, k: int,
+                tile: int, n_tiles: int, n_corpus: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        d_scr[...] = jnp.full_like(d_scr, BIG)
+        i_scr[...] = jnp.full_like(i_scr, -1)
+
+    q = q_ref[...].astype(jnp.float32)              # [bq, D]
+    c = c_ref[...].astype(jnp.float32)              # [tile, D]
+    # squared L2 = |q|^2 - 2 q.c + |c|^2 ; |q|^2 is rank-constant, dropped
+    dots = jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    d = jnp.sum(c * c, axis=1)[None, :] - 2.0 * dots     # [bq, tile]
+    ids = ti * tile + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    d = jnp.where(ids < n_corpus, d, BIG)
+
+    # merge into running top-k: concat candidates then extract k minima
+    # via masked arg-min rounds (no scatter -> Mosaic-lowerable)
+    cand_d = jnp.concatenate([d_scr[...], d], axis=1)       # [bq, k+tile]
+    cand_i = jnp.concatenate([i_scr[...], ids], axis=1)
+    col = jax.lax.broadcasted_iota(jnp.int32, cand_d.shape, 1)
+    new_d, new_i = [], []
+    for _ in range(k):
+        am = jnp.argmin(cand_d, axis=1)                     # [bq]
+        sel = col == am[:, None]
+        new_d.append(jnp.min(cand_d, axis=1))
+        new_i.append(jnp.sum(jnp.where(sel, cand_i, 0), axis=1))
+        cand_d = jnp.where(sel, BIG, cand_d)
+    d_scr[...] = jnp.stack(new_d, axis=1)
+    i_scr[...] = jnp.stack(new_i, axis=1).astype(jnp.int32)
+
+    @pl.when(ti == n_tiles - 1)
+    def _finish():
+        od_ref[...] = d_scr[...]
+        oi_ref[...] = i_scr[...]
+
+
+def ann_topk_fwd(queries, corpus, *, k: int = 16, block_q: int = 128,
+                 tile: int = 512, interpret: bool = True):
+    """queries [Q, D]; corpus [N, D] -> (dists [Q, k], ids [Q, k]).
+
+    Distances omit the constant |q|^2 term (rank-preserving)."""
+    Q, D = queries.shape
+    N = corpus.shape[0]
+    block_q = min(block_q, Q)
+    tile = min(tile, N)
+    nq = pl.cdiv(Q, block_q)
+    nt = pl.cdiv(N, tile)
+    kern = functools.partial(_ann_kernel, k=k, tile=tile, n_tiles=nt,
+                             n_corpus=N)
+    return pl.pallas_call(
+        kern,
+        grid=(nq, nt),
+        in_specs=[
+            pl.BlockSpec((block_q, D), lambda qi, ti: (qi, 0)),
+            pl.BlockSpec((tile, D), lambda qi, ti: (ti, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda qi, ti: (qi, 0)),
+            pl.BlockSpec((block_q, k), lambda qi, ti: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(queries, corpus)

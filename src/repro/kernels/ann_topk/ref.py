@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused distance+top-k kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def reference_ann_topk(queries, corpus, k: int = 16):
+    """Same rank-preserving distance (no |q|^2 term)."""
+    qf = queries.astype(jnp.float32)
+    cf = corpus.astype(jnp.float32)
+    d = jnp.sum(cf * cf, axis=1)[None, :] - 2.0 * qf @ cf.T
+    neg_d, ids = jax.lax.top_k(-d, k)
+    return -neg_d, ids.astype(jnp.int32)

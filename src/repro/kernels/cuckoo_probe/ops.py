@@ -1,0 +1,28 @@
+"""Jit'd wrapper: hashes keys to candidate buckets, runs the probe kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import cuckoo_probe_fwd
+
+
+def hash_pair(keys, n_buckets: int):
+    """Two independent 32-bit multiplicative hashes -> bucket ids."""
+    k = keys.astype(jnp.uint32)
+    h1 = (k * jnp.uint32(0x9E3779B1)) ^ (k >> 16)
+    h2 = (k * jnp.uint32(0x85EBCA77)) ^ (k >> 13)
+    return ((h1 % jnp.uint32(n_buckets)).astype(jnp.int32),
+            (h2 % jnp.uint32(n_buckets)).astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cuckoo_probe(keys, bucket_keys, bucket_vals, *, interpret: bool = True):
+    """Batched GET. keys [N] int32; table [n_buckets, slots].
+
+    Returns (found [N] int32, values [N] int32)."""
+    b1, b2 = hash_pair(keys, bucket_keys.shape[0])
+    return cuckoo_probe_fwd(keys, b1, b2, bucket_keys, bucket_vals,
+                            interpret=interpret)

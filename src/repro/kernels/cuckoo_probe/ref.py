@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the cuckoo bucket probe."""
+import jax.numpy as jnp
+
+
+def reference_cuckoo_probe(keys, b1, b2, bucket_keys, bucket_vals):
+    k1 = bucket_keys[b1]                  # [N, slots]
+    v1 = bucket_vals[b1]
+    k2 = bucket_keys[b2]
+    v2 = bucket_vals[b2]
+    hit1 = k1 == keys[:, None]
+    hit2 = k2 == keys[:, None]
+    any1 = jnp.any(hit1, axis=1)
+    any2 = jnp.any(hit2, axis=1)
+    val1 = jnp.sum(jnp.where(hit1, v1, 0), axis=1)
+    val2 = jnp.sum(jnp.where(hit2, v2, 0), axis=1)
+    found = (any1 | any2).astype(jnp.int32)
+    return found, jnp.where(any1, val1, val2)

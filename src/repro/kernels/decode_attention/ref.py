@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for decode attention with per-batch fill lengths."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_decode_attention(q, k, v, lengths, *, scale: float):
+    """q [B,H,hd]; k,v [B,KV,T,hd]; lengths [B] -> [B,H,hd]."""
+    B, H, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    qr = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, qr, hd)
+    s = jnp.einsum("bgqd,bgtd->bgqt", qf, k.astype(jnp.float32)) * scale
+    valid = jnp.arange(T)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgqt,bgtd->bgqd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash_attention (GQA, optional causal)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(q, k, v, *, causal: bool = True, scale: float):
+    """q [B,H,S,hd]; k,v [B,KV,T,hd] -> [B,H,S,hd] (f32 math)."""
+    B, H, S, D = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    qr = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, qr, S, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bgqsd,bgtd->bgqst", qf, kf) * scale
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgqst,bgtd->bgqsd", w, vf)
+    return o.reshape(B, H, S, D).astype(q.dtype)

@@ -1,0 +1,2 @@
+from .cuckoo import BlockedCuckooStore  # noqa
+from . import model  # noqa

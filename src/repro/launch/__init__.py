@@ -1,0 +1,3 @@
+# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time and is
+# meant to be launched as `python -m repro.launch.dryrun`.
+from . import mesh, roofline  # noqa

@@ -1,0 +1,96 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""HLO attribution tool for the perf loop: lowers a cell and histograms
+output-shape bytes by op kind and by originating source line (metadata),
+identifying which model code accounts for the memory/collective terms.
+
+  python -m repro.launch.diagnose --arch qwen3-moe-235b-a22b \\
+      --shape train_4k [--groups 1] [--top 25]
+"""
+import argparse
+import collections
+import dataclasses
+import re
+
+from ..configs import ARCHS, get_config
+from ..configs import shapes as shp
+from .dryrun import lower_cell
+from .mesh import make_production_mesh
+from .roofline import _DTYPE_BYTES, _SHAPE_RE
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+ = (\S+) ([\w\-]+)\(")
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _bytes_of(shape_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in (dims.split(",") if dims else []):
+            n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def histogram(hlo_text: str):
+    by_kind = collections.Counter()
+    by_src = collections.Counter()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if kind in ("parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast"):
+            continue
+        b = _bytes_of(shape_str)
+        if b < 2**20:
+            continue
+        by_kind[kind] += b
+        mm = _META_RE.search(line)
+        src = mm.group(1)[-90:] if mm else "?"
+        by_src[f"{kind:18s} {src}"] += b
+    return by_kind, by_src
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, required=True)
+    ap.add_argument("--shape", choices=list(shp.SHAPES), required=True)
+    ap.add_argument("--groups", type=int, default=0,
+                    help=">0: unrolled probe with this many groups")
+    ap.add_argument("--cost-exact", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.groups:
+        cfg = dataclasses.replace(cfg, n_groups=args.groups)
+        if cfg.encoder is not None:
+            cfg = dataclasses.replace(cfg, encoder=dataclasses.replace(
+                cfg.encoder, n_groups=args.groups))
+    shape = shp.SHAPES[args.shape]
+    mesh = make_production_mesh()
+    compiled = lower_cell(cfg, shape, mesh, step_kind=shape.step,
+                          cost_exact=args.cost_exact,
+                          unroll=bool(args.groups))
+    ca = compiled.cost_analysis()
+    print(f"flops={ca.get('flops', 0):.3e}  "
+          f"bytes={ca.get('bytes accessed', 0):.3e}")
+    by_kind, by_src = histogram(compiled.as_text())
+    print("\n-- output bytes by op kind (>=1MiB ops) --")
+    for k, v in by_kind.most_common(args.top):
+        print(f"  {v/2**30:10.2f} GiB  {k}")
+    print("\n-- output bytes by source --")
+    for k, v in by_src.most_common(args.top):
+        print(f"  {v/2**30:10.2f} GiB  {k}")
+
+
+if __name__ == "__main__":
+    main()

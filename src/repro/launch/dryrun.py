@@ -1,0 +1,407 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+cell with abstract inputs (ShapeDtypeStruct, zero allocation), record
+memory_analysis / cost_analysis / the collective schedule, and emit the
+roofline terms.
+
+The two lines above MUST stay first: jax locks the device count at first
+initialization, and the production meshes need 512 placeholder devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--no-probes]
+  python -m repro.launch.dryrun --list
+
+Results are cached as JSON under results/dryrun/.
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, get_config
+from ..configs import shapes as shp
+from ..models import model as model_lib
+from ..parallel.sharding import Rules, serve_rules, train_rules
+from ..train import step as train_step_lib
+from . import roofline
+from .mesh import make_production_mesh
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+
+def _is_names(v):
+    return isinstance(v, tuple) and all(
+        isinstance(e, (str, type(None))) for e in v)
+
+
+def tree_shardings(rules: Rules, abstract, logical):
+    return jax.tree.map(
+        lambda a, names: rules.sharding(a.shape, names),
+        abstract, logical, is_leaf=lambda x: _is_names(x))
+
+
+def with_shardings(abstract, shardings):
+    """Attach shardings to ShapeDtypeStructs (jit then needs no in_shardings)."""
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract, shardings)
+
+
+def batch_shardings(rules: Rules, batch):
+    out = {}
+    for k, v in batch.items():
+        if k == "positions":
+            names = (None, "batch", None) if len(v.shape) == 3 \
+                else ("batch", None)
+        elif v.ndim == 3:
+            names = ("batch", None, None)
+        else:
+            names = ("batch",) + (None,) * (v.ndim - 1)
+        out[k] = rules.sharding(v.shape, names)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+def abstract_train_state(cfg, tcfg):
+    """Abstract TrainState + logical tree without allocating."""
+    params_abs = jax.eval_shape(
+        lambda k: model_lib.init_params(k, cfg)[0], jax.random.PRNGKey(0))
+    logical = model_logical(cfg)
+    opt_abs = {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "mu": jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), params_abs),
+        "nu": jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), params_abs),
+    }
+    state_abs = {"params": params_abs, "opt": opt_abs}
+    state_logical = {"params": logical,
+                     "opt": {"step": (), "mu": logical, "nu": logical}}
+    return state_abs, state_logical
+
+
+def model_logical(cfg):
+    """Logical tree for params, computed without touching arrays."""
+    logical = {"embed": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        logical["unembed"] = ("vocab", "embed")
+
+    def stacked(spec):
+        return jax.tree.map(
+            lambda names: ("layers",) + tuple(names),
+            model_lib._sub_logical(cfg, spec), is_leaf=_is_names)
+
+    shared = {}
+    groups = {}
+    for li, layer in enumerate(cfg.pattern):
+        for si, s in enumerate(layer):
+            k = model_lib._key(li, si)
+            if getattr(s, "shared", False):
+                shared[k] = model_lib._sub_logical(cfg, s)
+            else:
+                groups[k] = stacked(s)
+    if shared:
+        logical["shared"] = shared
+    logical["groups"] = groups
+    if cfg.tail:
+        logical["tail"] = {
+            model_lib._key(li, si): model_lib._sub_logical(cfg, s)
+            for li, layer in enumerate(cfg.tail)
+            for si, s in enumerate(layer)}
+    from ..models.layers import norm_init
+    _, fnl = norm_init(cfg.d_model, cfg.norm)
+    logical["final_norm"] = fnl
+    if cfg.encoder is not None:
+        elog = {model_lib._key(li, si): stacked(s)
+                for li, layer in enumerate(cfg.encoder.pattern)
+                for si, s in enumerate(layer)}
+        logical["encoder"] = {"groups": elog, "final_norm": fnl}
+    return logical
+
+
+def lower_cell(cfg, shape, mesh, *, step_kind, cost_exact=False,
+               unroll=False, tcfg=None, moe_tokens_gather=False,
+               kv_int8=False):
+    """Lower+compile one cell; returns the compiled artifact."""
+    import jax.numpy as _jnp
+    kv_dtype = _jnp.int8 if kv_int8 else _jnp.bfloat16
+    tcfg = tcfg or train_step_lib.TrainConfig()
+    _serve_rules = functools.partial(serve_rules,
+                                     moe_tokens_gather=moe_tokens_gather)
+    if step_kind == "train":
+        rules = train_rules(mesh)
+        state_abs, state_logical = abstract_train_state(cfg, tcfg)
+        state_sh = tree_shardings(rules, state_abs, state_logical)
+        state_in = with_shardings(state_abs, state_sh)
+        batch = shp.token_inputs(cfg, shape)
+        batch_in = with_shardings(batch, batch_shardings(rules, batch))
+        fn = functools.partial(
+            train_step_lib.train_step, cfg=cfg, rules=rules, tcfg=tcfg,
+            cost_exact=cost_exact, unroll=unroll)
+        # donate the TrainState: optimizer update aliases in-place, exactly
+        # as the production step runs
+        lowered = jax.jit(fn, donate_argnums=(0,)).lower(state_in, batch_in)
+    elif step_kind == "prefill":
+        rules = _serve_rules(mesh)
+        params_abs = jax.eval_shape(
+            lambda k: model_lib.init_params(k, cfg)[0],
+            jax.random.PRNGKey(0))
+        params_abs = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16
+                                           if a.dtype == jnp.float32
+                                           else a.dtype), params_abs)
+        logical = model_logical(cfg)
+        p_in = with_shardings(params_abs,
+                              tree_shardings(rules, params_abs, logical))
+        batch = shp.token_inputs(cfg, shape)
+        batch_in = with_shardings(batch, batch_shardings(rules, batch))
+        cache_abs = shp.cache_specs(cfg, shape.global_batch, shape.seq_len)
+        cache_log = model_lib.cache_logical_tree(cfg)
+        cache_in = with_shardings(
+            cache_abs, tree_shardings(rules, cache_abs, cache_log))
+        fn = functools.partial(model_lib.prefill, cfg=cfg, rules=rules,
+                               cost_exact=cost_exact, unroll=unroll)
+        lowered = jax.jit(
+            lambda p, b, c: fn(p, batch=b, cache=c),
+            donate_argnums=(2,)).lower(p_in, batch_in, cache_in)
+    elif step_kind == "decode":
+        rules = _serve_rules(mesh)
+        params_abs = jax.eval_shape(
+            lambda k: model_lib.init_params(k, cfg)[0],
+            jax.random.PRNGKey(0))
+        params_abs = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16
+                                           if a.dtype == jnp.float32
+                                           else a.dtype), params_abs)
+        logical = model_logical(cfg)
+        p_in = with_shardings(params_abs,
+                              tree_shardings(rules, params_abs, logical))
+        token, cache_abs, index = shp.decode_inputs(cfg, shape,
+                                                     kv_dtype=kv_dtype)
+        cache_log = model_lib.cache_logical_tree(cfg, kv_quant=kv_int8)
+        cache_in = with_shardings(
+            cache_abs, tree_shardings(rules, cache_abs, cache_log))
+        tok_in = with_shardings(
+            token, rules.sharding(token.shape, ("batch", None)))
+        fn = functools.partial(model_lib.decode_step, cfg=cfg, rules=rules,
+                               cost_exact=cost_exact, unroll=unroll)
+        lowered = jax.jit(
+            lambda p, t, c, i: fn(p, token=t, cache=c, index=i),
+            donate_argnums=(2,)).lower(p_in, tok_in, cache_in, index)
+    else:
+        raise ValueError(step_kind)
+    return lowered.compile()
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             probes: bool = True, tcfg=None, cfg_override=None,
+             tag: str = "", moe_tokens_gather: bool = False,
+             kv_int8: bool = False) -> dict:
+    cfg = cfg_override or get_config(arch)
+    shape = shp.SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    out = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "step": shape.step, "tag": tag}
+    skip = shp.skip_reason(cfg, shape)
+    if skip:
+        out["skipped"] = skip
+        return out
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    compiled = lower_cell(cfg, shape, mesh, step_kind=shape.step,
+                          tcfg=tcfg, moe_tokens_gather=moe_tokens_gather,
+                          kv_int8=kv_int8)
+    out["compile_s"] = round(time.time() - t0, 1)
+
+    ma = compiled.memory_analysis()
+    peak = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+            + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    out["memory"] = {
+        "argument_gib": ma.argument_size_in_bytes / 2**30,
+        "output_gib": ma.output_size_in_bytes / 2**30,
+        "temp_gib": ma.temp_size_in_bytes / 2**30,
+        "alias_gib": ma.alias_size_in_bytes / 2**30,
+        "code_gib": ma.generated_code_size_in_bytes / 2**30,
+        "peak_gib": peak / 2**30,
+        "hbm_gib": 16.0,
+        "fits": peak / 2**30 <= 16.0,
+    }
+    full = roofline.cost_terms(compiled)
+    out["scanned_artifact"] = full.to_dict()
+    del compiled
+
+    if probes:
+        p1 = _probe(cfg, shape, mesh, 1, tcfg,
+                    moe_tokens_gather=moe_tokens_gather, kv_int8=kv_int8)
+        p2 = _probe(cfg, shape, mesh, 2, tcfg,
+                    moe_tokens_gather=moe_tokens_gather, kv_int8=kv_int8)
+        total = roofline.extrapolate(p1, p2, cfg.n_groups)
+        # gradient accumulation runs the model as a scan over microbatches
+        # (body counted once): scale per-step costs by the slice count
+        # (slight optimizer-update overcount, <1% of flops)
+        if tcfg is not None and getattr(tcfg, "microbatch", 0):
+            n_micro = shape.global_batch // tcfg.microbatch
+            if n_micro > 1:
+                total = total.scale(n_micro)
+                p1, p2 = p1.scale(n_micro), p2.scale(n_micro)
+        out["probe1"] = p1.to_dict()
+        out["probe2"] = p2.to_dict()
+        out["total"] = total.to_dict()
+        # exact probes materialize full quadratic scores: correct FLOPs but
+        # inflated bytes, and SPMD can insert replicate-reshard collectives
+        # the streamed path never executes. For attention cells, re-probe
+        # the streamed (chunked/flash) path and take bytes + wire from it.
+        if shape.seq_len ** 2 > 1024 * 1024 \
+                and shape.step in ("train", "prefill") \
+                and cfg.has_attention:
+            c1 = _probe(cfg, shape, mesh, 1, tcfg, cost_exact=False,
+                        moe_tokens_gather=moe_tokens_gather)
+            c2 = _probe(cfg, shape, mesh, 2, tcfg, cost_exact=False,
+                        moe_tokens_gather=moe_tokens_gather)
+            chunked = roofline.extrapolate(c1, c2, cfg.n_groups)
+            if tcfg is not None and getattr(tcfg, "microbatch", 0):
+                n_micro = shape.global_batch // tcfg.microbatch
+                if n_micro > 1:
+                    chunked = chunked.scale(n_micro)
+            out["probe1_chunked"] = c1.to_dict()
+            out["probe2_chunked"] = c2.to_dict()
+            out["total_chunked"] = chunked.to_dict()
+            total = roofline.CostTerms(
+                total.flops, chunked.bytes_accessed, chunked.wire_bytes,
+                chunked.wire_by_kind)
+        mf = roofline.model_flops_for(cfg, shape, chips)
+        out["model_flops"] = mf
+        out["n_groups"] = cfg.n_groups
+        out["chips"] = chips
+        out["roofline"] = roofline.roofline(total, chips, mf)
+    return out
+
+
+def _probe(cfg, shape, mesh, n_groups, tcfg, cost_exact=True,
+           moe_tokens_gather=False, kv_int8=False):
+    """Unrolled probe with `n_groups` groups."""
+    small = dataclasses.replace(cfg, n_groups=n_groups)
+    if cfg.encoder is not None:
+        small = dataclasses.replace(
+            small, encoder=dataclasses.replace(cfg.encoder,
+                                               n_groups=n_groups))
+    compiled = lower_cell(small, shape, mesh, step_kind=shape.step,
+                          cost_exact=cost_exact, unroll=True, tcfg=tcfg,
+                          moe_tokens_gather=moe_tokens_gather,
+                          kv_int8=kv_int8)
+    terms = roofline.cost_terms(compiled)
+    del compiled
+    return terms
+
+
+def cells(include_skipped: bool = False):
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape_name in shp.SHAPE_ORDER:
+            skip = shp.skip_reason(cfg, shp.SHAPES[shape_name])
+            if skip and not include_skipped:
+                continue
+            yield arch, shape_name, skip
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(shp.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--serve-tokens-gather", action="store_true",
+                    help="decode-optimized MoE layout (hillclimb variant);"
+                         " results tagged __tokens")
+    ap.add_argument("--microbatch", type=int, default=0,
+                    help="gradient-accumulation microbatch (train cells)")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="quantized int8 KV cache (decode cells)")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if args.list:
+        for arch, shape_name, skip in cells(include_skipped=True):
+            print(f"{arch:28s} {shape_name:12s}"
+                  f"{' SKIP: ' + skip if skip else ''}")
+        return
+
+    todo = []
+    if args.all:
+        todo = [(a, s) for a, s, _ in cells()]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    ok = True
+    tag = ""
+    tcfg = None
+    if args.serve_tokens_gather:
+        tag += "__tokens"
+    if args.kv_int8:
+        tag += "__kvint8"
+    if args.microbatch:
+        tag += f"__mb{args.microbatch}"
+        tcfg = train_step_lib.TrainConfig(
+            microbatch=args.microbatch)
+    for arch, shape_name in todo:
+        mesh_name = "multi" if args.multi_pod else "single"
+        path = outdir / f"{arch}__{shape_name}__{mesh_name}{tag}.json"
+        if path.exists() and not args.force:
+            print(f"[cached] {path.name}")
+            continue
+        print(f"[run] {arch} x {shape_name} x {mesh_name}{tag}", flush=True)
+        try:
+            res = run_cell(arch, shape_name, multi_pod=args.multi_pod,
+                           probes=not args.no_probes, tag=tag, tcfg=tcfg,
+                           moe_tokens_gather=args.serve_tokens_gather,
+                           kv_int8=args.kv_int8)
+            path.write_text(json.dumps(res, indent=1))
+            if "roofline" in res:
+                r = res["roofline"]
+                print(f"  compile={res['compile_s']}s "
+                      f"peak={res['memory']['peak_gib']:.2f}GiB "
+                      f"dom={r['dominant']} "
+                      f"frac={r['roofline_fraction']:.3f}", flush=True)
+            elif "skipped" in res:
+                print(f"  skipped: {res['skipped']}")
+            else:
+                print(f"  compile={res['compile_s']}s "
+                      f"peak={res['memory']['peak_gib']:.2f}GiB")
+        except Exception as e:
+            ok = False
+            print(f"  FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc(limit=8)
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

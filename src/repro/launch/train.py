@@ -1,0 +1,128 @@
+"""End-to-end training driver: data pipeline -> jit train_step ->
+checkpoint manager -> watchdog, with restart/rollback semantics.
+
+Runs reduced configs on CPU (examples, CI) and the full configs unchanged
+on a real mesh — the driver only touches public APIs that are
+mesh-agnostic.
+
+  python -m repro.launch.train --arch deepseek-7b --reduced --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.manager import CheckpointConfig, CheckpointManager
+from ..configs import ARCHS, get_config
+from ..data.pipeline import DataConfig, PrefetchIterator, SyntheticLM
+from ..optim.adamw import AdamWConfig
+from ..parallel.sharding import single_device_rules, train_rules
+from ..train.step import TrainConfig, init_state, train_step
+from ..train.watchdog import RollbackSignal, Watchdog
+from .mesh import make_host_mesh
+
+
+@dataclasses.dataclass
+class RunConfig:
+    arch: str = "deepseek-7b"
+    reduced: bool = True
+    steps: int = 100
+    batch: int = 8
+    seq: int = 64
+    lr: float = 3e-3
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    log_every: int = 10
+    resume: bool = True
+    max_rollbacks: int = 3
+    microbatch: int = 0
+
+
+def run(rc: RunConfig, rules=None, quiet=False):
+    cfg = get_config(rc.arch, reduced=rc.reduced)
+    rules = rules or single_device_rules()
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(peak_lr=rc.lr, warmup_steps=max(
+            rc.steps // 20, 5), total_steps=rc.steps),
+        microbatch=rc.microbatch)
+
+    state, _ = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+    mgr = CheckpointManager(CheckpointConfig(root=rc.ckpt_dir))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=rc.seq,
+                                  global_batch=rc.batch))
+
+    start = 0
+    if rc.resume and mgr.latest_step() is not None:
+        state, extra = mgr.restore(state)
+        start = int(extra.get("data_step", mgr.latest_step()))
+        if not quiet:
+            print(f"[train] resumed from step {start}")
+
+    step_fn = jax.jit(functools.partial(train_step, cfg=cfg, rules=rules,
+                                        tcfg=tcfg), donate_argnums=(0,))
+    wd = Watchdog()
+    it = PrefetchIterator(data, start_step=start)
+    losses = []
+    rollbacks = 0
+    i = start
+    while i < rc.steps:
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        wd.begin_step()
+        try:
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            wd.end_step(i, loss)
+        except RollbackSignal as sig:
+            rollbacks += 1
+            if rollbacks > rc.max_rollbacks or mgr.latest_step() is None:
+                raise
+            state, extra = mgr.restore(state)
+            it.close()
+            i = int(extra.get("data_step", mgr.latest_step()))
+            it = PrefetchIterator(data, start_step=i)
+            if not quiet:
+                print(f"[train] {sig} -> restored step {i}")
+            continue
+        losses.append(loss)
+        i += 1
+        if i % rc.ckpt_every == 0 or i == rc.steps:
+            mgr.save(i, state, extra={"data_step": i,
+                                      "loss": loss})
+        if not quiet and i % rc.log_every == 0:
+            print(f"[train] step {i:5d} loss {loss:8.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}")
+    it.close()
+    return {"losses": losses, "final_loss": losses[-1] if losses else None,
+            "straggler_events": wd.straggler_events,
+            "rollbacks": rollbacks, "state": state}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b", choices=ARCHS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="full (non-reduced) config — real mesh required")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+    rc = RunConfig(arch=args.arch, reduced=not args.full, steps=args.steps,
+                   batch=args.batch, seq=args.seq, lr=args.lr,
+                   ckpt_dir=args.ckpt_dir, resume=not args.no_resume)
+    out = run(rc)
+    print(f"[train] done: final loss {out['final_loss']:.4f} "
+          f"({len(out['losses'])} steps, {out['rollbacks']} rollbacks)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from . import attention, config, ffn, layers, model, moe, ssm, xlstm  # noqa
+from .config import (AttnSpec, EncoderConfig, FfnSpec, MLstmSpec,  # noqa
+                     Mamba2Spec, ModelConfig, MoeSpec, SLstmSpec)

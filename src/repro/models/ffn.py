@@ -1,0 +1,39 @@
+"""Dense feed-forward sublayer (SwiGLU / GeGLU / GELU / ReLU^2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import FfnSpec, ModelConfig
+from .layers import Ctx, activation, dense_init
+
+
+def init(key, cfg: ModelConfig, spec: FfnSpec):
+    d, f = cfg.d_model, spec.d_ff
+    gated = spec.act in ("swiglu", "geglu")
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {"w_in": dense_init(k1, (d, f), fan_in=d),
+              "w_out": dense_init(k2, (f, d), fan_in=f)}
+    if gated:
+        params["w_gate"] = dense_init(k3, (d, f), fan_in=d)
+    return params, logical(cfg, spec)
+
+
+def logical(cfg: ModelConfig, spec: FfnSpec):
+    out = {"w_in": ("embed", "ffn"), "w_out": ("ffn", "embed")}
+    if spec.act in ("swiglu", "geglu"):
+        out["w_gate"] = ("embed", "ffn")
+    return out
+
+
+def apply(params, x, spec: FfnSpec, cfg: ModelConfig, ctx: Ctx):
+    dt = ctx.compute_dtype
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(dt))
+    if spec.act in ("swiglu", "geglu"):
+        act = jax.nn.silu if spec.act == "swiglu" else jax.nn.gelu
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt))
+        h = act(g) * h
+    else:
+        h = activation(spec.act)(h)
+    h = ctx.rules.constrain(h, "batch", None, "act_ffn")
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(dt))

@@ -1,0 +1,237 @@
+"""Mamba-2 (state-space duality) block, plus the shared chunked linear-
+recurrence core also used by the xLSTM mLSTM block.
+
+The SSD recurrence  S_t = a_t * S_t-1 + g_t * (k_t ⊗ v_t),  y_t = q_t · S_t
+is evaluated in the chunked dual form: within a chunk (length Q) the output
+is a masked quadratic form (pure matmuls, MXU-friendly, fully counted by
+HLO cost analysis); across chunks only the [N,P] states are passed through
+a short `lax.scan` (elementwise decay+add, negligible FLOPs — noted in the
+roofline methodology).
+
+All recurrence math runs in f32 regardless of the compute dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import Mamba2Spec, ModelConfig
+from .layers import Ctx, dense_init
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d (shared by mamba2 / xlstm blocks)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, b, state=None):
+    """x [B,S,C]; w [W,C]; b [C]; state [B,W-1,C] or None.
+
+    Returns (y [B,S,C], new_state [B,W-1,C]).
+    """
+    B, S, C = x.shape
+    W = w.shape[0]
+    xf = x.astype(jnp.float32)
+    if state is None:
+        ctx_in = jnp.pad(xf, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        ctx_in = jnp.concatenate([state.astype(jnp.float32), xf], axis=1)
+    y = jax.lax.conv_general_dilated(
+        ctx_in, w.astype(jnp.float32)[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=C)
+    y = jax.nn.silu(y + b.astype(jnp.float32))
+    new_state = ctx_in[:, -(W - 1):, :] if W > 1 else ctx_in[:, :0, :]
+    return y.astype(x.dtype), new_state.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD core
+# ---------------------------------------------------------------------------
+
+def chunked_ssd(q, k, v, logf, gate, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                cost_exact: bool = False):
+    """Linear recurrence in chunked dual form.
+
+    q, k  [B,S,H,N]; v [B,S,H,P]; logf, gate [B,S,H] (logf <= 0).
+    Returns (y [B,S,H,P], final_state [B,H,N,P]).
+    """
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    f32 = jnp.float32
+    if pad:
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (a.ndim - 2))
+        q, k, v, logf, gate = map(zpad, (q, k, v, logf, gate))
+    rs = lambda a: a.reshape(B, nc, Q, *a.shape[2:])
+    qc, kc, vc = rs(q).astype(f32), rs(k).astype(f32), rs(v).astype(f32)
+    fc, gc = rs(logf).astype(f32), rs(gate).astype(f32)
+
+    cum = jnp.cumsum(fc, axis=2)                       # [B,NC,Q,H]
+    total = cum[:, :, -1]                              # [B,NC,H]
+    # decay from j to i (i >= j): exp(cum_i - cum_j). Mask BEFORE the exp:
+    # above-diagonal diffs are positive and can overflow to inf, and
+    # where(mask, inf, 0) produces inf*0 = NaN in the backward pass.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,NC,Qi,Qj,H]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.exp(jnp.where(tri, diff, -1e30))
+
+    # intra-chunk: y_i = sum_{j<=i} (q_i . k_j) L_ij g_j v_j
+    s = jnp.einsum("bcihn,bcjhn->bcijh", qc, kc) * L \
+        * gc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", s, vc)
+
+    # chunk states: S_c = sum_j exp(total - cum_j) g_j k_j (x) v_j
+    w = jnp.exp(total[:, :, None, :] - cum) * gc       # [B,NC,Q,H]
+    states = jnp.einsum("bcjh,bcjhn,bcjhp->bchnp", w, kc, vc)
+
+    # pass states across chunks (sequential, elementwise)
+    decay = jnp.exp(total)                             # [B,NC,H]
+    s0 = (jnp.zeros((B, H, N, P), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def body(carry, xs):
+        st, dc = xs
+        prev = carry
+        new = dc[:, :, None, None] * prev + st
+        return new, prev
+
+    final, prevs = jax.lax.scan(
+        body, s0, (states.transpose(1, 0, 2, 3, 4),
+                   decay.transpose(1, 0, 2)),
+        unroll=nc if cost_exact else 1)
+    prevs = prevs.transpose(1, 0, 2, 3, 4)             # [B,NC,H,N,P]
+
+    # inter-chunk contribution: y_i += exp(cum_i) q_i . S_prev
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp",
+                         qc * jnp.exp(cum)[..., None], prevs)
+    y = (y_intra + y_inter).reshape(B, nc * Q, H, P)
+    if pad:
+        y = y[:, :S]
+    return y.astype(v.dtype), final
+
+
+def ssd_decode_step(q, k, v, logf, gate, state):
+    """Single-token recurrence. q,k [B,H,N]; v [B,H,P]; logf,gate [B,H];
+    state [B,H,N,P] f32. Returns (y [B,H,P], new_state)."""
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    a = jnp.exp(logf.astype(f32))[:, :, None, None]
+    new_state = a * state + (gate.astype(f32)[:, :, None, None]
+                             * k[..., None] * v[:, :, None, :])
+    y = jnp.einsum("bhn,bhnp->bhp", q, new_state)
+    return y.astype(v.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 sublayer
+# ---------------------------------------------------------------------------
+
+def _dims(cfg: ModelConfig, spec: Mamba2Spec):
+    d_in = spec.expand * cfg.d_model
+    n_heads = d_in // spec.head_dim
+    conv_dim = d_in + 2 * spec.n_groups * spec.d_state
+    return d_in, n_heads, conv_dim
+
+
+def init(key, cfg: ModelConfig, spec: Mamba2Spec):
+    d = cfg.d_model
+    d_in, H, conv_dim = _dims(cfg, spec)
+    G, N = spec.n_groups, spec.d_state
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * G * N + H    # z, x, B, C, dt
+    params = {
+        "w_in": dense_init(ks[0], (d, proj_out), fan_in=d),
+        "conv_w": dense_init(ks[1], (spec.d_conv, conv_dim),
+                             fan_in=spec.d_conv),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "w_out": dense_init(ks[2], (d_in, d), fan_in=d_in),
+    }
+    return params, logical(cfg, spec)
+
+
+def logical(cfg: ModelConfig, spec: Mamba2Spec):
+    return {
+        "w_in": ("embed", "ffn"), "conv_w": ("conv", "ffn"),
+        "conv_b": ("ffn",), "a_log": (None,), "dt_bias": (None,),
+        "d_skip": (None,), "norm_scale": ("ffn",),
+        "w_out": ("ffn", "embed"),
+    }
+
+
+def init_cache(cfg: ModelConfig, spec: Mamba2Spec, batch: int,
+               dtype=jnp.bfloat16):
+    d_in, H, conv_dim = _dims(cfg, spec)
+    return {
+        "ssm": jnp.zeros((batch, H, spec.d_state, spec.head_dim),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, spec.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def cache_logical(spec: Mamba2Spec):
+    return {"ssm": ("cache_batch", "act_heads", None, None),
+            "conv": ("cache_batch", None, "act_ffn")}
+
+
+def apply(params, x, spec: Mamba2Spec, cfg: ModelConfig, ctx: Ctx,
+          cache=None) -> Tuple[jax.Array, Optional[dict]]:
+    """x [B,S,D] (normed). Returns (out [B,S,D], new_cache)."""
+    B, S, D = x.shape
+    d_in, H, conv_dim = _dims(cfg, spec)
+    G, N, P = spec.n_groups, spec.d_state, spec.head_dim
+    dt_ = ctx.compute_dtype
+
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(dt_))
+    # split: z [d_in] | conv block [conv_dim] = x + B + C | dt [H]
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:d_in + conv_dim]
+    dt_raw = proj[..., d_in + conv_dim:]
+
+    conv_state = cache["conv"] if cache is not None and ctx.mode == "decode" \
+        else None
+    xbc, new_conv = causal_conv1d(xbc, params["conv_w"], params["conv_b"],
+                                  conv_state)
+    xs = xbc[..., :d_in].reshape(B, S, H, P)
+    Bm = xbc[..., d_in:d_in + G * N].reshape(B, S, G, N)
+    Cm = xbc[..., d_in + G * N:].reshape(B, S, G, N)
+    # broadcast groups to heads
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    logf = -jnp.exp(params["a_log"]) * dt               # [B,S,H]
+
+    if ctx.mode == "decode" and cache is not None:
+        y, new_ssm = ssd_decode_step(
+            Ch[:, 0], Bh[:, 0], xs[:, 0], logf[:, 0], dt[:, 0],
+            cache["ssm"])
+        y = y[:, None]
+    else:
+        y, final = chunked_ssd(Ch, Bh, xs, logf, dt, spec.chunk,
+                               init_state=None, cost_exact=ctx.cost_exact)
+        new_ssm = final
+
+    y = y + xs * params["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, d_in)
+    # gated RMSNorm (mamba2 style)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + cfg.norm_eps) * params["norm_scale"]
+    out = jnp.einsum("bse,ed->bsd", yf.astype(dt_),
+                     params["w_out"].astype(dt_))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"ssm": new_ssm, "conv": new_conv}
+    return out, new_cache

@@ -1,0 +1,122 @@
+"""AdamW with decoupled weight decay, global-norm clipping, cosine/linear
+schedules, and optional int8 error-feedback gradient compression for the
+data-parallel all-reduce.
+
+Pure-pytree implementation (no optax dependency): state is {step, mu, nu}
+(+ {err} when compression is on), sharded like the parameters — combined
+with FSDP parameter sharding this gives ZeRO-style optimizer-state
+partitioning for free under GSPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    schedule: str = "cosine"           # "cosine" | "linear" | "constant"
+    # int8 error-feedback DP gradient compression (0 = off)
+    compress_bits: int = 0
+
+
+def schedule_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) \
+            * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1.0 - cfg.min_lr_frac) * frac
+    else:
+        decay = 1.0
+    return cfg.peak_lr * warm * decay
+
+
+def init_state(params, cfg: AdamWConfig):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+    }
+    if cfg.compress_bits:
+        state["err"] = jax.tree.map(zeros, params)
+    return state
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def compress_int8(g, err):
+    """Error-feedback int8 quantization of a gradient leaf.
+
+    Returns (decompressed gradient, new error). Under data-parallel
+    all-reduce the int8 representation cuts DP gradient wire bytes 4x vs
+    f32 (2x vs bf16); the residual is fed back next step so the update is
+    unbiased in the long run (EF-SGD).
+    """
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, gf - deq
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.clip_norm else 1.0
+
+    new_err = state.get("err")
+    if cfg.compress_bits:
+        pairs = jax.tree.map(compress_int8, grads, state["err"])
+        grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda p: p[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        u = (mu / c1) / (jnp.sqrt(nu / c2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"step": step, "mu": new_mu, "nu": new_nu}
+    if cfg.compress_bits:
+        new_state["err"] = new_err
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

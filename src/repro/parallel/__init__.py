@@ -1,0 +1,1 @@
+from .sharding import Rules, serve_rules, single_device_rules, train_rules  # noqa

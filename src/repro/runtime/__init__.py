@@ -1,0 +1,1 @@
+from .tiers import TierSpec, TierStats, TieredStore  # noqa

@@ -1,0 +1,161 @@
+"""TieredStore — the paper's break-even analysis driving a live
+HBM / host-DRAM / Storage-Next-flash object store.
+
+On this container the tiers are emulated pools (numpy arrays + accounting)
+with the calibrated cost/latency model attached from `repro.core`; the
+decision logic, movement, hit/miss accounting and capacity pressure are
+real. On a TPU host the same API fronts device HBM, host memory, and an
+NVMe path.
+
+Placement policy: `core.policy.TieringPolicy` (EMA of observed reuse
+intervals vs the calibrated break-even thresholds, with hysteresis).
+Capacity pressure triggers demotion of the stalest objects (the policy's
+evict_candidates order), so each tier holds exactly the hot set S(T) the
+paper's §V analysis prescribes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from ..core.policy import Tier, TieringPolicy
+
+
+@dataclasses.dataclass
+class TierSpec:
+    capacity_bytes: float
+    read_bw: float              # bytes/s (for modeled latency accounting)
+    read_latency: float         # seconds per access (fixed part)
+
+
+@dataclasses.dataclass
+class TierStats:
+    hits: int = 0
+    misses: int = 0
+    bytes_read: int = 0
+    bytes_written: int = 0
+    modeled_time: float = 0.0
+    promotions: int = 0
+    demotions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class TieredStore:
+    """Key -> ndarray store spanning three tiers with policy movement."""
+
+    def __init__(self, policy: TieringPolicy,
+                 specs: Optional[Dict[Tier, TierSpec]] = None,
+                 clock: Callable[[], float] = None):
+        # defaults: v5e-host-like HBM/DRAM plus a Storage-Next SSD tier
+        self.specs = specs or {
+            Tier.HBM: TierSpec(16e9, 819e9, 1e-7),
+            Tier.DRAM: TierSpec(128e9, 45e9, 5e-7),
+            Tier.FLASH: TierSpec(4e12, 7e9, 2e-5),
+        }
+        self.policy = policy
+        self.clock = clock or time.monotonic
+        self._data: Dict[Tier, Dict[object, np.ndarray]] = {
+            t: {} for t in Tier}
+        self._used = {t: 0 for t in Tier}
+        self.stats: Dict[Tier, TierStats] = {t: TierStats() for t in Tier}
+
+    # ----------------------------------------------------------------- util
+    def tier_of(self, key) -> Optional[Tier]:
+        for t in Tier:
+            if key in self._data[t]:
+                return t
+        return None
+
+    def used_bytes(self, tier: Tier) -> int:
+        return self._used[tier]
+
+    def _charge_read(self, tier: Tier, nbytes: int):
+        st = self.stats[tier]
+        st.bytes_read += nbytes
+        st.modeled_time += self.specs[tier].read_latency \
+            + nbytes / self.specs[tier].read_bw
+
+    # ------------------------------------------------------------------ api
+    def put(self, key, value: np.ndarray, tier: Tier = Tier.DRAM):
+        value = np.asarray(value)
+        cur = self.tier_of(key)
+        if cur is not None:
+            self._remove(key, cur)
+        self._ensure_room(tier, value.nbytes)
+        self._data[tier][key] = value
+        self._used[tier] += value.nbytes
+        self.stats[tier].bytes_written += value.nbytes
+        self.policy.observe(key, now=self.clock())
+
+    def get(self, key, now: Optional[float] = None) -> np.ndarray:
+        now = self.clock() if now is None else now
+        cur = self.tier_of(key)
+        if cur is None:
+            raise KeyError(key)
+        for t in Tier:
+            if t == cur:
+                self.stats[t].hits += 1
+            elif t < cur:
+                self.stats[t].misses += 1
+        value = self._data[cur][key]
+        self._charge_read(cur, value.nbytes)
+        want = self.policy.observe(key, now=now)
+        if want != cur:
+            self._move(key, cur, want)
+        return value
+
+    def delete(self, key):
+        cur = self.tier_of(key)
+        if cur is not None:
+            self._remove(key, cur)
+
+    # ------------------------------------------------------------- movement
+    def _remove(self, key, tier: Tier):
+        v = self._data[tier].pop(key)
+        self._used[tier] -= v.nbytes
+        return v
+
+    def _move(self, key, src: Tier, dst: Tier):
+        v = self._remove(key, src)
+        self._ensure_room(dst, v.nbytes)
+        self._data[dst][key] = v
+        self._used[dst] += v.nbytes
+        self.stats[dst].bytes_written += v.nbytes
+        if dst < src:
+            self.stats[dst].promotions += 1
+        else:
+            self.stats[dst].demotions += 1
+
+    def _ensure_room(self, tier: Tier, nbytes: int):
+        """Demote stalest residents until `nbytes` fits (FLASH never
+        evicts — it is the capacity tier)."""
+        spec = self.specs[tier]
+        while self._used[tier] + nbytes > spec.capacity_bytes \
+                and tier != Tier.FLASH:
+            victims = [k for k in self.policy.evict_candidates(tier)
+                       if k in self._data[tier]]
+            if not victims:
+                victims = list(self._data[tier])
+            if not victims:
+                break
+            self._move(victims[0], tier, Tier(tier + 1))
+
+    # ---------------------------------------------------------------- report
+    def report(self) -> str:
+        lines = []
+        for t in Tier:
+            st = self.stats[t]
+            lines.append(
+                f"{t.name:6s} used={self._used[t]/2**20:9.1f}MiB "
+                f"objs={len(self._data[t]):6d} hit_rate={st.hit_rate:.3f} "
+                f"read={st.bytes_read/2**20:9.1f}MiB "
+                f"t_model={st.modeled_time*1e3:8.2f}ms "
+                f"promo={st.promotions} demo={st.demotions}")
+        return "\n".join(lines)

@@ -1,0 +1,1 @@
+from .engine import DecodeEngine, Request  # noqa

@@ -1,0 +1,208 @@
+"""Serving engine: continuous batching over a fixed slot grid, with
+five-minute-rule-driven KV offload.
+
+The engine owns a decode cache of `max_slots` sequences. Requests are
+prefilled into free slots (one jit'd prefill per admission batch) and all
+live slots advance together through one jit'd decode step per token
+(per-slot fill indices — slots at different positions coexist).
+
+KV tiering (the paper's technique at work): when a request pauses (e.g.
+multi-turn sessions) its per-slot KV block is *extracted* and handed to
+the TieredStore keyed by session id; the TieringPolicy's observed reuse
+interval vs the calibrated break-even threshold decides whether it lands
+in host DRAM or flash. On resume the block is re-inserted into a free
+slot. This is exactly the paper's "LLM memory layer / session-state"
+workload (§VII-A) realized on the serving runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.policy import Tier, TieringPolicy
+from ..models import model as model_lib
+from ..models.config import ModelConfig
+from ..parallel.sharding import Rules
+from ..runtime.tiers import TieredStore
+
+
+@dataclasses.dataclass
+class Request:
+    rid: str
+    prompt: np.ndarray            # [S] int32
+    max_new: int = 16
+    slot: Optional[int] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, cfg: ModelConfig, params, rules: Rules, *,
+                 max_slots: int = 4, max_len: int = 256,
+                 policy: Optional[TieringPolicy] = None,
+                 store: Optional[TieredStore] = None,
+                 compute_dtype=jnp.float32, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.rules = rules
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.dtype = compute_dtype
+        self.greedy = greedy
+        self.cache = model_lib.init_cache(cfg, max_slots, max_len,
+                                          dtype=compute_dtype)
+        self.lengths = np.zeros(max_slots, np.int32)    # filled positions
+        self.live = np.zeros(max_slots, bool)
+        self.slot_req: Dict[int, Request] = {}
+        self.policy = policy or TieringPolicy(tau_hot=0.05, tau_be=5.0)
+        self.store = store or TieredStore(self.policy)
+        self.steps = 0
+
+        self._prefill = jax.jit(functools.partial(
+            model_lib.prefill, cfg=cfg, rules=rules,
+            compute_dtype=compute_dtype))
+        self._decode = jax.jit(functools.partial(
+            model_lib.decode_step, cfg=cfg, rules=rules,
+            compute_dtype=compute_dtype))
+
+    # ------------------------------------------------------------ admission
+    def _free_slots(self) -> List[int]:
+        return [i for i in range(self.max_slots) if not self.live[i]]
+
+    def admit(self, req: Request):
+        """Prefill a request into a free slot (single-sequence prefill
+        batched into the slot grid via masking writes)."""
+        free = self._free_slots()
+        if not free:
+            raise RuntimeError("no free slots")
+        slot = free[0]
+        S = len(req.prompt)
+        assert S < self.max_len
+        # run a batch-1 prefill against a temp cache, then splice the slot
+        tmp_cache = model_lib.init_cache(self.cfg, 1, self.max_len,
+                                         dtype=self.dtype)
+        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+        if self.cfg.encoder is not None:
+            batch["frames"] = jnp.zeros(
+                (1, self.cfg.encoder.n_frames, self.cfg.d_model),
+                self.dtype)
+        tmp_cache, logits = self._prefill(self.params, batch=batch,
+                                          cache=tmp_cache)
+        self._splice_slot(tmp_cache, slot)
+        self.lengths[slot] = S
+        self.live[slot] = True
+        req.slot = slot
+        self.slot_req[slot] = req
+        first = int(np.argmax(np.asarray(logits[0]))) if self.greedy else 0
+        req.generated.append(first)
+        return slot
+
+    def _splice_slot(self, src_cache, slot: int, src_idx: int = 0):
+        # group caches are stacked [G, B, ...] (batch at dim 1); tail
+        # caches are unstacked [B, ...] (batch at dim 0)
+        new_groups = jax.tree.map(
+            lambda dst, src: dst.at[:, slot].set(src[:, src_idx]),
+            self.cache["groups"], src_cache["groups"])
+        new_tail = jax.tree.map(
+            lambda dst, src: dst.at[slot].set(src[src_idx]),
+            self.cache["tail"], src_cache["tail"])
+        self.cache = {"groups": new_groups, "tail": new_tail}
+
+    def _extract_slot(self, slot: int):
+        return {
+            "groups": jax.tree.map(lambda a: np.asarray(a[:, slot]),
+                                   self.cache["groups"]),
+            "tail": jax.tree.map(lambda a: np.asarray(a[slot]),
+                                 self.cache["tail"]),
+        }
+
+    # -------------------------------------------------------------- pausing
+    def pause(self, rid: str):
+        """Offload a session's KV block through the tiered store."""
+        slot = next(s for s, r in self.slot_req.items() if r.rid == rid)
+        req = self.slot_req.pop(slot)
+        blk = self._extract_slot(slot)
+        flat = jax.tree.leaves(blk)
+        blob = np.concatenate([np.asarray(l, np.float32).ravel()
+                               for l in flat])
+        self.store.put(("kv", rid), blob)
+        self._paused = getattr(self, "_paused", {})
+        self._paused[rid] = (req, jax.tree.structure(blk),
+                             [(l.shape, l.dtype) for l in flat],
+                             int(self.lengths[slot]))
+        self.live[slot] = False
+        self.lengths[slot] = 0
+        return self.store.tier_of(("kv", rid))
+
+    def resume(self, rid: str):
+        req, treedef, shapes, length = self._paused.pop(rid)
+        blob = self.store.get(("kv", rid))
+        leaves, off = [], 0
+        for shape, dtype in shapes:
+            n = int(np.prod(shape))
+            leaves.append(jnp.asarray(
+                blob[off:off + n].reshape(shape), dtype))
+            off += n
+        blk = jax.tree.unflatten(treedef, leaves)
+        free = self._free_slots()
+        if not free:
+            raise RuntimeError("no free slots")
+        slot = free[0]
+        new_groups = jax.tree.map(
+            lambda dst, src: dst.at[:, slot].set(src.astype(dst.dtype)),
+            self.cache["groups"], blk["groups"])
+        new_tail = jax.tree.map(
+            lambda dst, src: dst.at[slot].set(src.astype(dst.dtype)),
+            self.cache["tail"], blk["tail"])
+        self.cache = {"groups": new_groups, "tail": new_tail}
+        self.lengths[slot] = length
+        self.live[slot] = True
+        req.slot = slot
+        self.slot_req[slot] = req
+        return slot
+
+    # ---------------------------------------------------------------- step
+    def step(self):
+        """One decode step for all live slots."""
+        if not self.live.any():
+            return
+        tokens = np.zeros((self.max_slots, 1), np.int32)
+        for slot, req in self.slot_req.items():
+            if self.live[slot] and req.generated:
+                tokens[slot, 0] = req.generated[-1]
+        idx = jnp.asarray(self.lengths)
+        self.cache, logits = self._decode(
+            self.params, token=jnp.asarray(tokens), cache=self.cache,
+            index=idx)
+        logits = np.asarray(logits)
+        self.steps += 1
+        for slot, req in list(self.slot_req.items()):
+            if not self.live[slot]:
+                continue
+            nxt = int(np.argmax(logits[slot]))
+            req.generated.append(nxt)
+            self.lengths[slot] += 1
+            if (len(req.generated) >= req.max_new
+                    or self.lengths[slot] >= self.max_len - 1):
+                req.done = True
+                self.live[slot] = False
+                del self.slot_req[slot]
+
+    def run(self, requests: List[Request], max_steps: int = 1000):
+        """Simple scheduler loop: admit as slots free up, decode until all
+        requests complete."""
+        pending = list(requests)
+        done = []
+        steps = 0
+        while (pending or self.live.any()) and steps < max_steps:
+            while pending and self._free_slots():
+                self.admit(pending.pop(0))
+            self.step()
+            steps += 1
+            done += [r for r in requests if r.done and r not in done]
+        return done

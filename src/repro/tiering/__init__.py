@@ -1,0 +1,1 @@
+from .expert_store import ExpertStore  # noqa

@@ -1,0 +1,91 @@
+"""MoE expert-weight tiering — the textbook instance of the paper's rule.
+
+Expert weights have wildly skewed reuse intervals at inference (router
+popularity is long-tailed); the five-second rule says: keep an expert in
+fast memory iff its observed reuse interval is below the calibrated
+break-even threshold. Cold experts live on the flash tier and are
+streamed on demand.
+
+`ExpertStore` tracks per-expert selection counts from router outputs,
+converts them to reuse intervals, and maintains residency through the
+shared TieredStore. `residency_plan` also answers the provisioning
+question: how much HBM/DRAM do we need for a target hit rate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..core.policy import Tier, TieringPolicy
+from ..runtime.tiers import TieredStore
+
+
+class ExpertStore:
+    def __init__(self, n_layers: int, n_experts: int,
+                 policy: TieringPolicy, store: Optional[TieredStore] = None,
+                 expert_bytes: float = 0.0):
+        self.n_layers = n_layers
+        self.n_experts = n_experts
+        self.policy = policy
+        self.store = store or TieredStore(policy)
+        self.expert_bytes = expert_bytes
+        self.counts = np.zeros((n_layers, n_experts), np.int64)
+        self.steps = 0
+        self.tokens_per_step = 0
+
+    # ------------------------------------------------------------- tracking
+    def observe_routing(self, layer: int, expert_ids: np.ndarray,
+                        now: float):
+        """Feed one layer's router output (any shape of int expert ids)."""
+        ids, cnt = np.unique(np.asarray(expert_ids).ravel(),
+                             return_counts=True)
+        self.counts[layer, ids] += cnt
+        for e in ids:
+            self.policy.observe((layer, int(e)), now=now)
+
+    def observe_step(self, routings: Dict[int, np.ndarray], now: float,
+                     tokens: int):
+        self.steps += 1
+        self.tokens_per_step = tokens
+        for layer, ids in routings.items():
+            self.observe_routing(layer, ids, now)
+
+    # ------------------------------------------------------------ decisions
+    def reuse_intervals(self, step_time: float) -> np.ndarray:
+        """Expected per-expert reuse interval from empirical popularity:
+        tau_e = step_time / P(expert selected in a step)."""
+        total = max(self.steps, 1)
+        p = np.clip(self.counts / max(
+            total * max(self.tokens_per_step, 1), 1), 1e-12, 1.0)
+        p_step = 1.0 - np.power(1.0 - p, max(self.tokens_per_step, 1))
+        return step_time / np.clip(p_step, 1e-12, 1.0)
+
+    def residency_plan(self, step_time: float) -> Dict[str, object]:
+        """Tier per expert via the stateless rule + capacity summary."""
+        tau = self.reuse_intervals(step_time)
+        tiers = np.asarray(self.policy.tiers_for_intervals(tau))
+        plan = {
+            "hbm_experts": int((tiers == Tier.HBM).sum()),
+            "dram_experts": int((tiers == Tier.DRAM).sum()),
+            "flash_experts": int((tiers == Tier.FLASH).sum()),
+            "tiers": tiers,
+        }
+        if self.expert_bytes:
+            plan["hbm_bytes"] = plan["hbm_experts"] * self.expert_bytes
+            plan["dram_bytes"] = plan["dram_experts"] * self.expert_bytes
+        return plan
+
+    def apply_plan(self, weights: Dict, step_time: float):
+        """Move actual expert weight blobs between tiers per the plan."""
+        plan = self.residency_plan(step_time)
+        tiers = plan["tiers"]
+        for (layer, e), blob in weights.items():
+            want = Tier(int(tiers[layer, e]))
+            cur = self.store.tier_of((layer, e))
+            if cur is None:
+                self.store.put((layer, e), blob, tier=want)
+            elif cur != want:
+                self.store._move((layer, e), cur, want)
+        return plan

@@ -1,0 +1,109 @@
+"""Platform advisor (paper §V-B) and TieringPolicy behaviour."""
+import pytest
+
+from repro.core import (
+    CPU_PLATFORM, GPU_PLATFORM, LatencyTargets, LogNormalWorkload,
+    Tier, TieringPolicy, analyze_platform,
+)
+
+
+def _wl(l_blk=512):
+    return LogNormalWorkload.from_total_throughput(
+        200e9, sigma=1.0, n_blk=1e9, l_blk=l_blk)
+
+
+class TestAdvisor:
+    def test_gpu_needs_less_viable_dram(self):
+        """§V-B: GPU+Storage-Next achieves viability with far less DRAM."""
+        targets = LatencyTargets(tail=13e-6)   # rho_max ~ 0.9 tier
+        cpu = analyze_platform(CPU_PLATFORM, _wl(), 512, targets)
+        gpu = analyze_platform(GPU_PLATFORM, _wl(), 512, targets)
+        assert gpu.c_dram_viable < cpu.c_dram_viable
+        assert gpu.tau_break_even < cpu.tau_break_even
+
+    def test_cpu_host_limited_at_512(self):
+        """CPU budget 100M/4 SSDs = 25M < rho*57M: host is the cap."""
+        rep = analyze_platform(CPU_PLATFORM, _wl(), 512,
+                               LatencyTargets(tail=13e-6))
+        assert rep.host_limited
+        assert rep.iops_ssd_usable == pytest.approx(25e6)
+
+    def test_gpu_device_limited_at_512(self):
+        rep = analyze_platform(GPU_PLATFORM, _wl(), 512,
+                               LatencyTargets(tail=13e-6))
+        assert not rep.host_limited
+
+    def test_viability_thresholds_small_on_gpu(self):
+        """Paper: on GPU+GDDR+SN both T_B and T_S are < 5s."""
+        rep = analyze_platform(GPU_PLATFORM, _wl(), 512,
+                               LatencyTargets(tail=13e-6))
+        assert rep.th.t_b < 5.0
+        assert rep.th.t_s < 5.0
+
+    def test_verdict_fields_present(self):
+        rep = analyze_platform(CPU_PLATFORM, _wl(), 512)
+        assert rep.verdict in {
+            "viable-optimal", "viable-suboptimal", "dram-bandwidth-limited",
+            "storage-limited", "jointly-insufficient", "infeasible"}
+        assert rep.recommendation
+        assert "tau_be" in rep.summary()
+
+    def test_capacity_monotone_in_blocksize_economics(self):
+        """Bigger blocks -> shorter tau_be -> optimal cache is a smaller
+        fraction of the dataset (paper Fig. 6 discussion)."""
+        frac = []
+        for l in (512, 4096):
+            rep = analyze_platform(CPU_PLATFORM, _wl(l), l,
+                                   LatencyTargets(tail=13e-6 if l == 512
+                                                  else 44e-6))
+            frac.append(rep.c_dram_optimal / _wl(l).total_bytes)
+        assert frac[1] <= frac[0] + 1e-9
+
+
+class TestTieringPolicy:
+    def test_stateless_boundaries(self):
+        p = TieringPolicy(tau_hot=0.1, tau_be=5.0)
+        assert p.tier_for_interval(0.01) == Tier.HBM
+        assert p.tier_for_interval(1.0) == Tier.DRAM
+        assert p.tier_for_interval(100.0) == Tier.FLASH
+
+    def test_vectorized_matches_scalar(self):
+        p = TieringPolicy(tau_hot=0.1, tau_be=5.0)
+        ivs = [0.01, 0.5, 4.9, 5.1, 500.0]
+        vec = [int(t) for t in p.tiers_for_intervals(ivs)]
+        assert vec == [int(p.tier_for_interval(i)) for i in ivs]
+
+    def test_hysteresis_blocks_thrash(self):
+        p = TieringPolicy(tau_hot=0.1, tau_be=5.0, hysteresis=0.5,
+                          ema_alpha=1.0)
+        # interval just above tau_be but inside the band -> stays DRAM
+        p.observe("k", now=0.0)
+        p.observe("k", now=5.5)
+        assert p.tier_of("k") == Tier.DRAM
+        # far above the band -> demoted
+        p.observe("k", now=5.5 + 20.0)
+        assert p.tier_of("k") == Tier.FLASH
+
+    def test_promotion_on_hot_access(self):
+        p = TieringPolicy(tau_hot=0.1, tau_be=5.0, ema_alpha=1.0)
+        p.observe("k", now=0.0)
+        p.observe("k", now=100.0)       # cold -> FLASH eventually
+        p.observe("k", now=200.0)
+        assert p.tier_of("k") == Tier.FLASH
+        for i in range(8):              # now very hot
+            p.observe("k", now=200.0 + 0.01 * (i + 1))
+        assert p.tier_of("k") in (Tier.HBM, Tier.DRAM)
+
+    def test_from_platform_seconds_scale(self):
+        p = TieringPolicy.from_platform(GPU_PLATFORM, 512,
+                                        LatencyTargets(tail=13e-6))
+        assert 0.5 < p.tau_be < 60.0      # the headline seconds regime
+        assert p.tau_hot < p.tau_be
+
+    def test_evict_candidates_ordering(self):
+        p = TieringPolicy(tau_hot=0.1, tau_be=5.0, ema_alpha=1.0)
+        for key, iv in (("a", 1.0), ("b", 3.0), ("c", 0.2)):
+            p.observe(key, now=0.0)
+            p.observe(key, now=iv)
+        cands = p.evict_candidates(Tier.DRAM, now=10.0)
+        assert cands[0] == "b"  # stalest first

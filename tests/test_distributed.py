@@ -1,0 +1,204 @@
+"""Multi-device tests, run in subprocesses with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (the main pytest
+process must keep seeing 1 device, per the assignment).
+
+Covers: sharded-vs-single-device train-step parity (incl. shard_map EP
+MoE), elastic re-mesh checkpoint restore (save on (2,4), restore on
+(4,2)), and a mini dry-run lower+compile on the 8-device mesh."""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _run(body: str, timeout=900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(body)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, \
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}"
+    return proc.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np, functools
+        from repro.configs import get_config
+        from repro.configs import shapes as shp
+        from repro.launch.mesh import make_mesh
+        from repro.launch.dryrun import tree_shardings, model_logical
+        from repro.parallel.sharding import train_rules, single_device_rules
+        from repro.train.step import TrainConfig, init_state, train_step
+
+        # MoE arch exercises the shard_map EP path end to end. Capacity is
+        # per-data-shard (GShard), so raise it to no-drop for exact parity
+        # across mesh shapes.
+        import dataclasses
+        from repro.models.config import MoeSpec
+        cfg = get_config("qwen3-moe-235b-a22b", reduced=True)
+        cfg = dataclasses.replace(cfg, pattern=tuple(
+            tuple(dataclasses.replace(s, capacity_factor=64.0)
+                  if isinstance(s, MoeSpec) else s for s in layer)
+            for layer in cfg.pattern))
+        tcfg = TrainConfig(compute_dtype=jnp.float32)
+        state, _ = init_state(jax.random.PRNGKey(0), cfg, tcfg)
+        batch = shp.concrete_batch(cfg, batch=4, seq=16)
+
+        r1 = single_device_rules()
+        s1, m1 = jax.jit(functools.partial(
+            train_step, cfg=cfg, rules=r1, tcfg=tcfg))(state, batch)
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        r8 = train_rules(mesh)
+        s8, m8 = jax.jit(functools.partial(
+            train_step, cfg=cfg, rules=r8, tcfg=tcfg))(state, batch)
+
+        l1, l8 = float(m1["loss"]), float(m8["loss"])
+        assert abs(l1 - l8) / abs(l1) < 2e-4, (l1, l8)
+        # parameters evolve identically (spot-check a leaf)
+        a = np.asarray(s1["params"]["embed"])
+        b = np.asarray(jax.device_get(s8["params"]["embed"]))
+        np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-5)
+        print("PARITY OK", l1, l8)
+        """)
+    assert "PARITY OK" in out
+
+
+def test_elastic_remesh_restore():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from repro.checkpoint.manager import CheckpointConfig, \\
+            CheckpointManager
+        from repro.configs import get_config
+        from repro.launch.mesh import make_mesh
+        from repro.launch.dryrun import tree_shardings, model_logical, \\
+            with_shardings
+        from repro.parallel.sharding import train_rules
+        from repro.models import model as M
+
+        cfg = get_config("deepseek-7b", reduced=True)
+        params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
+        logical = model_logical(cfg)
+
+        mesh_a = make_mesh((2, 4), ("data", "model"))
+        sh_a = tree_shardings(train_rules(mesh_a), params, logical)
+        params_a = jax.tree.map(jax.device_put, params, sh_a)
+
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(CheckpointConfig(root=d))
+            mgr.save(7, {"params": params_a})
+
+            # restore onto a different topology: (4 data, 2 model)
+            mesh_b = make_mesh((4, 2), ("data", "model"))
+            sh_b = {"params": tree_shardings(train_rules(mesh_b), params,
+                                             logical)}
+            out, _ = mgr.restore({"params": params}, shardings=sh_b)
+        for x, y in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(out["params"])):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        # the restored arrays actually live on mesh_b
+        leaf = out["params"]["embed"]
+        assert leaf.sharding.mesh.shape["data"] == 4
+        print("ELASTIC OK")
+        """)
+    assert "ELASTIC OK" in out
+
+
+def test_mini_dryrun_lower_compile():
+    out = _run("""
+        import jax, dataclasses
+        from repro.configs import get_config
+        from repro.configs import shapes as shp
+        from repro.launch.mesh import make_mesh
+        from repro.launch import dryrun
+        from repro.launch.roofline import cost_terms
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        for arch, shape_name in (("gemma-2b", "train_4k"),
+                                 ("zamba2-7b", "decode_32k")):
+            cfg = get_config(arch, reduced=True)
+            # shrink the assigned shape to smoke scale, keep the step kind
+            shape = dataclasses.replace(
+                shp.SHAPES[shape_name], seq_len=64, global_batch=8)
+            compiled = dryrun.lower_cell(cfg, shape, mesh,
+                                         step_kind=shape.step)
+            terms = cost_terms(compiled)
+            assert terms.flops > 0
+            ma = compiled.memory_analysis()
+            assert ma.temp_size_in_bytes >= 0
+            print("CELL OK", arch, shape_name, int(terms.flops))
+        print("MINI DRYRUN OK")
+        """)
+    assert "MINI DRYRUN OK" in out
+
+
+def test_decode_equivalence_under_sharding():
+    """Prefill+decode == forward on an 8-device mesh (cache sharding,
+    select-update, seq-sharded KV all active)."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.launch.mesh import make_mesh
+        from repro.parallel.sharding import serve_rules
+        from repro.models import model as M
+
+        cfg = get_config("mistral-nemo-12b", reduced=True)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rules = serve_rules(mesh)
+        params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
+        B, S, S0 = 2, 12, 6
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                  cfg.vocab)
+        logits_par, _ = M.forward(params, cfg, rules, {"tokens": toks},
+                                  compute_dtype=jnp.float32, remat=False)
+        cache = M.init_cache(cfg, B, S, dtype=jnp.float32)
+        cache, lp = M.prefill(params, cfg, rules,
+                              {"tokens": toks[:, :S0]}, cache,
+                              compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(lp),
+                                   np.asarray(logits_par[:, S0-1]),
+                                   rtol=3e-4, atol=3e-4)
+        for t in range(S0, S):
+            cache, ld = M.decode_step(params, cfg, rules, toks[:, t:t+1],
+                                      cache, jnp.asarray(t, jnp.int32),
+                                      compute_dtype=jnp.float32)
+            np.testing.assert_allclose(np.asarray(ld),
+                                       np.asarray(logits_par[:, t]),
+                                       rtol=6e-4, atol=6e-4)
+        print("SHARDED DECODE OK")
+        """)
+    assert "SHARDED DECODE OK" in out
+
+
+def test_pipeline_parallel_matches_sequential():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_mesh
+        from repro.parallel.pipeline import pipeline_apply, reference_apply
+
+        mesh = make_mesh((4,), ("stage",))
+        D = 16
+        def stage_fn(p, x):
+            return jnp.tanh(x @ p["w"] + p["b"])
+        key = jax.random.PRNGKey(0)
+        params = {
+            "w": jax.random.normal(key, (4, D, D)) * 0.3,
+            "b": jnp.zeros((4, D)),
+        }
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, D))
+        y = pipeline_apply(stage_fn, params, x, mesh, axis="stage",
+                           n_micro=4)
+        ref = reference_apply(stage_fn, params, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        print("PIPELINE OK")
+        """)
+    assert "PIPELINE OK" in out

@@ -1,0 +1,91 @@
+"""Serving-engine tests: continuous batching across slots at different
+positions, pause/resume KV round-trip through the tiered store, and
+generation equivalence with a reference loop."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.policy import TieringPolicy
+from repro.models import model as M
+from repro.parallel.sharding import single_device_rules
+from repro.serving.engine import DecodeEngine, Request
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("gemma-2b", reduced=True)
+    rules = single_device_rules()
+    params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, rules, params
+
+
+def _reference_generate(cfg, rules, params, prompt, n_new):
+    """Single-sequence greedy loop via prefill + decode."""
+    import jax.numpy as jnp
+    cache = M.init_cache(cfg, 1, 64, dtype=jnp.float32)
+    cache, logits = M.prefill(params, cfg, rules,
+                              {"tokens": jnp.asarray(prompt[None])},
+                              cache, compute_dtype=jnp.float32)
+    out = [int(np.argmax(np.asarray(logits[0])))]
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        cache, logits = M.decode_step(
+            params, cfg, rules, jnp.asarray([[out[-1]]]), cache,
+            jnp.asarray(pos, jnp.int32), compute_dtype=jnp.float32)
+        out.append(int(np.argmax(np.asarray(logits[0]))))
+        pos += 1
+    return out
+
+
+def test_engine_matches_reference(setup):
+    cfg, rules, params = setup
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab, 6).astype(np.int32)
+               for _ in range(3)]
+    ref = [_reference_generate(cfg, rules, params, p, 6) for p in prompts]
+
+    eng = DecodeEngine(cfg, params, rules, max_slots=3, max_len=64)
+    reqs = [Request(rid=f"r{i}", prompt=p, max_new=6)
+            for i, p in enumerate(prompts)]
+    done = eng.run(reqs)
+    assert len(done) == 3
+    for r, expect in zip(reqs, ref):
+        assert r.generated == expect, (r.rid, r.generated, expect)
+
+
+def test_engine_staggered_admission(setup):
+    """Requests admitted at different times share decode steps."""
+    cfg, rules, params = setup
+    rng = np.random.default_rng(1)
+    eng = DecodeEngine(cfg, params, rules, max_slots=2, max_len=64)
+    reqs = [Request(rid=f"r{i}",
+                    prompt=rng.integers(1, cfg.vocab, 4 + i).astype(
+                        np.int32), max_new=5) for i in range(4)]
+    done = eng.run(reqs)           # 4 requests through 2 slots
+    assert len(done) == 4
+    assert all(len(r.generated) == 5 for r in reqs)
+
+
+def test_engine_pause_resume_roundtrip(setup):
+    cfg, rules, params = setup
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(1, cfg.vocab, 6).astype(np.int32)
+    ref = _reference_generate(cfg, rules, params, prompt, 8)
+
+    eng = DecodeEngine(cfg, params, rules, max_slots=2, max_len=64,
+                       policy=TieringPolicy(tau_hot=1e-9, tau_be=1e9))
+    req = Request(rid="s", prompt=prompt, max_new=8)
+    eng.admit(req)
+    for _ in range(3):
+        eng.step()
+    eng.pause("s")
+    # another request cycles through the freed slot
+    other = Request(rid="o", prompt=prompt[:4], max_new=3)
+    eng.admit(other)
+    while not other.done:
+        eng.step()
+    eng.resume("s")
+    while not req.done:
+        eng.step()
+    assert req.generated == ref, (req.generated, ref)
