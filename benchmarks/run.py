@@ -56,6 +56,8 @@ def main():
          {"quick": quick}),
         ("Beyond-paper: TCO + CXL 4-tier ladder (paper §VIII)",
          pf.tco_ladder, {}),
+        ("Beyond-paper: async-prefetch serving stall (runtime)",
+         pf.serving_async, {"quick": quick}),
     ]
     failures = []
     for name, fn, kw in artifacts:

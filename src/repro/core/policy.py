@@ -11,6 +11,11 @@ Tiers: HBM (accelerator), DRAM (host), FLASH (Storage-Next SSD). The
 HBM<->DRAM boundary uses the same Eq. 1 with HBM standing in as the
 "memory" and DRAM+interconnect as the "storage"; the DRAM<->FLASH boundary
 is the paper's headline threshold.
+
+Clock contract: `observe` / `evict_candidates` take an explicit `now`.
+Callers on the async runtime (TieredStore and friends) always pass their
+injected clock's time so decisions are deterministic under test; the
+`time.monotonic()` default is a convenience edge for ad-hoc use only.
 """
 from __future__ import annotations
 

@@ -1,0 +1,14 @@
+"""Pallas-TPU API compat helpers shared by the kernel wrappers.
+
+Newer jax renamed `pltpu.TPUCompilerParams` to `pltpu.CompilerParams`;
+resolve whichever exists so the kernels lower on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(dimension_semantics):
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(dimension_semantics=tuple(dimension_semantics))

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .._compat import tpu_compiler_params
+
 BIG = 1e30
 
 
@@ -95,6 +97,6 @@ def ann_topk_fwd(queries, corpus, *, k: int = 16, block_q: int = 128,
             pltpu.VMEM((block_q, k), jnp.int32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(queries, corpus)

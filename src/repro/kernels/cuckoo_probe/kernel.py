@@ -35,10 +35,12 @@ def _probe_kernel(b1_idx, b2_idx, keys_ref, bk1_ref, bv1_ref, bk2_ref,
     hit2 = k2 == key
     any1 = jnp.any(hit1)
     any2 = jnp.any(hit2)
-    val1 = jnp.sum(jnp.where(hit1, v1, 0))
-    val2 = jnp.sum(jnp.where(hit2, v2, 0))
+    # pin the accumulator dtype: some jax versions promote integer sums
+    # to int64 inside kernel tracing, which cannot store to an i32 ref
+    val1 = jnp.sum(jnp.where(hit1, v1, 0), dtype=jnp.int32)
+    val2 = jnp.sum(jnp.where(hit2, v2, 0), dtype=jnp.int32)
     found_ref[0] = (any1 | any2).astype(jnp.int32)
-    val_ref[0] = jnp.where(any1, val1, val2)
+    val_ref[0] = jnp.where(any1, val1, val2).astype(jnp.int32)
 
 
 def cuckoo_probe_fwd(keys, b1, b2, bucket_keys, bucket_vals, *,

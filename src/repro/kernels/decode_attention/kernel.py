@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .._compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -103,6 +105,6 @@ def decode_attention_fwd(q, k, v, lengths, *, scale: float,
             pltpu.VMEM((KV, qr, hd), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(lengths, q, k, v)

@@ -1,2 +1,3 @@
 from .cuckoo import BlockedCuckooStore  # noqa
+from .tiered import TimedCuckooStore  # noqa
 from . import model  # noqa

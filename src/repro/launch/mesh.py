@@ -12,19 +12,18 @@ from __future__ import annotations
 
 import jax
 
+from ..parallel.sharding import make_compat_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_compat_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh with Auto axis types (tests / small runs)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_compat_mesh(shape, axes)
 
 
 def make_host_mesh(*, model: int = 1):

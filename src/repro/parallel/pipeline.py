@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .sharding import shard_map_compat
+
 
 def pipeline_apply(stage_fn: Callable, stage_params, x, mesh,
                    axis: str = "stage", n_micro: int = None):
@@ -78,8 +80,8 @@ def pipeline_apply(stage_fn: Callable, stage_params, x, mesh,
     xs = x.reshape(n_micro, mb, *x.shape[1:])
     in_specs = (P(axis), P())        # params split by stage; data replicated
     out_specs = P()
-    y = jax.shard_map(run, mesh=mesh, in_specs=in_specs,
-                      out_specs=out_specs, check_vma=False)(
+    y = shard_map_compat(run, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)(
         stage_params, xs)
     return y.reshape(B, *x.shape[1:])
 

@@ -1,0 +1,163 @@
+"""AsyncTierRuntime — event-driven, queueing-aware tier movement engine.
+
+This is the shared movement engine behind all three paper workloads
+(LLM session KV via `serving.engine`, MoE experts via
+`tiering.expert_store`, the KV store via `kvstore.tiered`). It turns
+tier accesses into *transfers* with explicit issue/start/done timestamps
+on an injectable clock (see `runtime.clock` for the clock-injection
+testing contract):
+
+  * `submit` schedules a transfer: the tier's service model (calibrated
+    from the ssdsim DES for flash — see `runtime.service`) yields an
+    occupancy and a pipelined latency for the current queue depth;
+    occupancies serialize on the tier (queueing), latencies overlap.
+  * `wait` blocks the virtual clock until the transfer completes and
+    returns the stall actually incurred — zero when enough compute time
+    was overlapped after `submit` (that difference is the whole point of
+    async prefetch).
+  * `advance` models compute proceeding while transfers stream in the
+    background (a decode step, a training step, host work).
+
+Per-tier `QueueStats` record stall time and miss-under-miss occupancy so
+benchmarks can report modeled per-token stall under load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional
+
+from ..core.policy import Tier
+from .clock import ensure_clock
+from .service import FixedLatencyModel, Service, SsdQueueModel
+
+
+@dataclasses.dataclass
+class Transfer:
+    key: object
+    nbytes: int
+    tier: Tier
+    kind: str                    # "fetch" | "promote" | "demote" | "write"
+    issue_t: float
+    start_t: float
+    done_t: float
+    depth_at_issue: int
+    seq: int
+
+    def is_done(self, now: float) -> bool:
+        return now >= self.done_t - 1e-12
+
+
+@dataclasses.dataclass
+class QueueStats:
+    submitted: int = 0
+    completed_waits: int = 0
+    stall_time: float = 0.0
+    busy_time: float = 0.0
+    bytes_moved: int = 0
+    miss_under_miss: int = 0     # submits issued while others in flight
+    max_depth: int = 0
+
+
+class AsyncTierRuntime:
+    # v5e-host-like defaults, matching TieredStore's default TierSpecs
+    DEFAULT_MODELS = {
+        Tier.HBM: FixedLatencyModel(1e-7, 819e9),
+        Tier.DRAM: FixedLatencyModel(5e-7, 45e9),
+    }
+
+    def __init__(self, clock=None, service_models=None,
+                 sim_cfg=None, specs=None):
+        self.clock = ensure_clock(clock)
+        if service_models is None:
+            service_models = dict(self.DEFAULT_MODELS)
+            if specs:
+                for t, spec in specs.items():
+                    service_models[t] = FixedLatencyModel(
+                        spec.read_latency, spec.read_bw)
+            # flash service always derives from the ssdsim queueing
+            # engine unless the caller explicitly injected a model
+            service_models[Tier.FLASH] = SsdQueueModel.shared(sim_cfg)
+        self.models = service_models
+        self._free: Dict[Tier, float] = {t: 0.0 for t in Tier}
+        self._inflight: Dict[Tier, List[Transfer]] = {t: [] for t in Tier}
+        self.qstats: Dict[Tier, QueueStats] = {t: QueueStats()
+                                               for t in Tier}
+        self._seq = itertools.count()
+
+    # ----------------------------------------------------------------- time
+    def now(self) -> float:
+        return self.clock.now()
+
+    def advance(self, dt: float) -> float:
+        """Model `dt` seconds of compute overlapping in-flight transfers."""
+        return self.clock.advance(dt)
+
+    # ---------------------------------------------------------------- queue
+    def _prune(self, tier: Tier):
+        now = self.clock.now()
+        self._inflight[tier] = [tr for tr in self._inflight[tier]
+                                if not tr.is_done(now)]
+
+    def queue_depth(self, tier: Tier) -> int:
+        self._prune(tier)
+        return len(self._inflight[tier])
+
+    # --------------------------------------------------------------- submit
+    def submit(self, tier: Tier, key, nbytes: int,
+               kind: str = "fetch") -> Transfer:
+        now = self.clock.now()
+        depth = self.queue_depth(tier)
+        svc: Service = self.models[tier].service(nbytes, depth + 1)
+        start = max(now, self._free[tier])
+        done = start + svc.occupancy + svc.latency
+        self._free[tier] = start + svc.occupancy
+        tr = Transfer(key=key, nbytes=int(nbytes), tier=tier, kind=kind,
+                      issue_t=now, start_t=start, done_t=done,
+                      depth_at_issue=depth, seq=next(self._seq))
+        self._inflight[tier].append(tr)
+        st = self.qstats[tier]
+        st.submitted += 1
+        st.busy_time += svc.occupancy
+        st.bytes_moved += int(nbytes)
+        if depth > 0:
+            st.miss_under_miss += 1
+        st.max_depth = max(st.max_depth, depth + 1)
+        return tr
+
+    # ----------------------------------------------------------------- wait
+    def wait(self, tr: Transfer) -> float:
+        """Block until `tr` completes; returns the stall incurred (zero if
+        it already finished in the background)."""
+        now = self.clock.now()
+        stall = max(0.0, tr.done_t - now)
+        if stall:
+            self.clock.advance_to(tr.done_t)
+        st = self.qstats[tr.tier]
+        st.completed_waits += 1
+        st.stall_time += stall
+        return stall
+
+    def drain(self, tier: Optional[Tier] = None) -> float:
+        """Advance to the completion of all in-flight transfers."""
+        tiers = [tier] if tier is not None else list(Tier)
+        t_done = self.clock.now()
+        for t in tiers:
+            for tr in self._inflight[t]:
+                t_done = max(t_done, tr.done_t)
+        self.clock.advance_to(t_done)
+        for t in tiers:
+            self._prune(t)
+        return t_done
+
+    # --------------------------------------------------------------- report
+    def report(self) -> str:
+        lines = []
+        for t in Tier:
+            st = self.qstats[t]
+            lines.append(
+                f"{t.name:6s} xfers={st.submitted:6d} "
+                f"stall={st.stall_time*1e3:9.3f}ms "
+                f"busy={st.busy_time*1e3:9.3f}ms "
+                f"mum={st.miss_under_miss:5d} maxQ={st.max_depth:3d}")
+        return "\n".join(lines)

@@ -12,16 +12,25 @@ intervals vs the calibrated break-even thresholds, with hysteresis).
 Capacity pressure triggers demotion of the stalest objects (the policy's
 evict_candidates order), so each tier holds exactly the hot set S(T) the
 paper's §V analysis prescribes.
+
+Timing model (new in the async runtime): accesses are *transfers* on an
+`AsyncTierRuntime`. Flash fetch latency derives from the calibrated
+ssdsim queueing engine — it varies with queue depth instead of being a
+fixed scalar — and `get_async` exposes the split issue/wait form so
+callers (serving prefetch, expert streaming) can overlap fetches with
+compute. All timing flows through an injectable clock (deterministic
+`VirtualClock` by default; see `runtime.clock` for the testing contract).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Dict, Optional
+from typing import Dict, Optional
 
 import numpy as np
 
 from ..core.policy import Tier, TieringPolicy
+from .async_engine import AsyncTierRuntime, Transfer
+from .clock import ensure_clock
 
 
 @dataclasses.dataclass
@@ -38,8 +47,11 @@ class TierStats:
     bytes_read: int = 0
     bytes_written: int = 0
     modeled_time: float = 0.0
+    stall_time: float = 0.0
     promotions: int = 0
     demotions: int = 0
+    prefetch_hits: int = 0      # async fetch finished before wait
+    prefetch_late: int = 0      # wait still had to block
 
     @property
     def hit_rate(self) -> float:
@@ -47,12 +59,31 @@ class TierStats:
         return self.hits / n if n else 0.0
 
 
+@dataclasses.dataclass
+class PendingFetch:
+    """Handle for an in-flight `get_async`; `wait()` yields the value and
+    records only the *residual* stall (zero when the fetch overlapped)."""
+    store: "TieredStore"
+    key: object
+    tier: Tier
+    transfer: Transfer
+    value: np.ndarray
+
+    def done(self) -> bool:
+        return self.transfer.is_done(self.store.clock.now())
+
+    def wait(self) -> np.ndarray:
+        self.store._finish_fetch(self)
+        return self.value
+
+
 class TieredStore:
     """Key -> ndarray store spanning three tiers with policy movement."""
 
     def __init__(self, policy: TieringPolicy,
                  specs: Optional[Dict[Tier, TierSpec]] = None,
-                 clock: Callable[[], float] = None):
+                 clock=None, runtime: Optional[AsyncTierRuntime] = None,
+                 sim_cfg=None):
         # defaults: v5e-host-like HBM/DRAM plus a Storage-Next SSD tier
         self.specs = specs or {
             Tier.HBM: TierSpec(16e9, 819e9, 1e-7),
@@ -60,7 +91,14 @@ class TieredStore:
             Tier.FLASH: TierSpec(4e12, 7e9, 2e-5),
         }
         self.policy = policy
-        self.clock = clock or time.monotonic
+        if runtime is not None:
+            self.runtime = runtime
+            self.clock = runtime.clock
+        else:
+            self.clock = ensure_clock(clock)
+            self.runtime = AsyncTierRuntime(clock=self.clock,
+                                            specs=self.specs,
+                                            sim_cfg=sim_cfg)
         self._data: Dict[Tier, Dict[object, np.ndarray]] = {
             t: {} for t in Tier}
         self._used = {t: 0 for t in Tier}
@@ -76,12 +114,6 @@ class TieredStore:
     def used_bytes(self, tier: Tier) -> int:
         return self._used[tier]
 
-    def _charge_read(self, tier: Tier, nbytes: int):
-        st = self.stats[tier]
-        st.bytes_read += nbytes
-        st.modeled_time += self.specs[tier].read_latency \
-            + nbytes / self.specs[tier].read_bw
-
     # ------------------------------------------------------------------ api
     def put(self, key, value: np.ndarray, tier: Tier = Tier.DRAM):
         value = np.asarray(value)
@@ -92,10 +124,10 @@ class TieredStore:
         self._data[tier][key] = value
         self._used[tier] += value.nbytes
         self.stats[tier].bytes_written += value.nbytes
-        self.policy.observe(key, now=self.clock())
+        self.runtime.submit(tier, key, value.nbytes, kind="write")
+        self.policy.observe(key, now=self.clock.now())
 
-    def get(self, key, now: Optional[float] = None) -> np.ndarray:
-        now = self.clock() if now is None else now
+    def _issue_fetch(self, key) -> PendingFetch:
         cur = self.tier_of(key)
         if cur is None:
             raise KeyError(key)
@@ -105,11 +137,41 @@ class TieredStore:
             elif t < cur:
                 self.stats[t].misses += 1
         value = self._data[cur][key]
-        self._charge_read(cur, value.nbytes)
-        want = self.policy.observe(key, now=now)
-        if want != cur:
-            self._move(key, cur, want)
-        return value
+        tr = self.runtime.submit(cur, key, value.nbytes, kind="fetch")
+        self.stats[cur].bytes_read += value.nbytes
+        return PendingFetch(store=self, key=key, tier=cur, transfer=tr,
+                            value=value)
+
+    def _finish_fetch(self, pf: PendingFetch, now: Optional[float] = None):
+        st = self.stats[pf.tier]
+        # a fetch only counts as a prefetch if compute time passed
+        # between issue and wait; a same-instant wait is a plain
+        # synchronous get and must not pollute the prefetch counters
+        if self.clock.now() > pf.transfer.issue_t:
+            if pf.done():
+                st.prefetch_hits += 1
+            else:
+                st.prefetch_late += 1
+        stall = self.runtime.wait(pf.transfer)
+        st.stall_time += stall
+        st.modeled_time += pf.transfer.done_t - pf.transfer.issue_t
+        now = self.clock.now() if now is None else now
+        want = self.policy.observe(pf.key, now=now)
+        cur = self.tier_of(pf.key)
+        if cur is not None and want != cur:
+            self._move(pf.key, cur, want)
+
+    def get(self, key, now: Optional[float] = None) -> np.ndarray:
+        """Synchronous fetch: blocks the clock for the full queueing-aware
+        service time."""
+        pf = self._issue_fetch(key)
+        self._finish_fetch(pf, now=now)
+        return pf.value
+
+    def get_async(self, key) -> PendingFetch:
+        """Issue a non-blocking fetch; the caller overlaps compute and
+        calls `.wait()` when the value is actually needed."""
+        return self._issue_fetch(key)
 
     def delete(self, key):
         cur = self.tier_of(key)
@@ -122,12 +184,28 @@ class TieredStore:
         self._used[tier] -= v.nbytes
         return v
 
+    def move(self, key, dst: Tier):
+        """Queue a movement of `key` to `dst` (non-blocking: structure
+        updates now, the transfer streams in the background)."""
+        src = self.tier_of(key)
+        if src is None:
+            raise KeyError(key)
+        if src != dst:
+            self._move(key, src, dst)
+
     def _move(self, key, src: Tier, dst: Tier):
         v = self._remove(key, src)
         self._ensure_room(dst, v.nbytes)
         self._data[dst][key] = v
         self._used[dst] += v.nbytes
         self.stats[dst].bytes_written += v.nbytes
+        self.stats[src].bytes_read += v.nbytes
+        kind = "promote" if dst < src else "demote"
+        # movement occupies both queues: the read on the source tier
+        # (a promotion out of flash contends with KV prefetches there)
+        # and the write on the destination
+        self.runtime.submit(src, key, v.nbytes, kind=kind)
+        self.runtime.submit(dst, key, v.nbytes, kind="write")
         if dst < src:
             self.stats[dst].promotions += 1
         else:
@@ -139,7 +217,8 @@ class TieredStore:
         spec = self.specs[tier]
         while self._used[tier] + nbytes > spec.capacity_bytes \
                 and tier != Tier.FLASH:
-            victims = [k for k in self.policy.evict_candidates(tier)
+            victims = [k for k in self.policy.evict_candidates(
+                           tier, now=self.clock.now())
                        if k in self._data[tier]]
             if not victims:
                 victims = list(self._data[tier])
@@ -157,5 +236,6 @@ class TieredStore:
                 f"objs={len(self._data[t]):6d} hit_rate={st.hit_rate:.3f} "
                 f"read={st.bytes_read/2**20:9.1f}MiB "
                 f"t_model={st.modeled_time*1e3:8.2f}ms "
+                f"stall={st.stall_time*1e3:8.2f}ms "
                 f"promo={st.promotions} demo={st.demotions}")
         return "\n".join(lines)

@@ -13,6 +13,17 @@ interval vs the calibrated break-even threshold decides whether it lands
 in host DRAM or flash. On resume the block is re-inserted into a free
 slot. This is exactly the paper's "LLM memory layer / session-state"
 workload (§VII-A) realized on the serving runtime.
+
+Async KV restore (queueing-aware runtime): `prefetch` issues a session's
+KV fetch through `TieredStore.get_async` *before* the slot is needed;
+each decode step advances the store's injected clock by `step_time`
+(modeled decode compute), so the flash transfer streams behind decode.
+`resume` then blocks only on the unfinished remainder — zero stall
+whenever the prefetch lead covers the queueing-aware fetch latency.
+Stall and miss-under-miss accounting land in the store's `TierStats` /
+the runtime's `QueueStats`; `kv_stall_time` totals the decode-visible
+stalls. The clock is injectable (deterministic `VirtualClock` default —
+see `repro.runtime.clock` for the testing contract).
 """
 from __future__ import annotations
 
@@ -46,6 +57,7 @@ class DecodeEngine:
                  max_slots: int = 4, max_len: int = 256,
                  policy: Optional[TieringPolicy] = None,
                  store: Optional[TieredStore] = None,
+                 clock=None, step_time: float = 0.0,
                  compute_dtype=jnp.float32, greedy: bool = True):
         self.cfg = cfg
         self.params = params
@@ -60,7 +72,12 @@ class DecodeEngine:
         self.live = np.zeros(max_slots, bool)
         self.slot_req: Dict[int, Request] = {}
         self.policy = policy or TieringPolicy(tau_hot=0.05, tau_be=5.0)
-        self.store = store or TieredStore(self.policy)
+        self.store = store or TieredStore(self.policy, clock=clock)
+        self.clock = self.store.clock
+        self.step_time = step_time      # modeled seconds of decode compute
+        self.kv_stall_time = 0.0        # decode-visible restore stalls
+        self._paused: Dict[str, tuple] = {}
+        self._pending: Dict[str, object] = {}   # rid -> PendingFetch
         self.steps = 0
 
         self._prefill = jax.jit(functools.partial(
@@ -131,7 +148,6 @@ class DecodeEngine:
         blob = np.concatenate([np.asarray(l, np.float32).ravel()
                                for l in flat])
         self.store.put(("kv", rid), blob)
-        self._paused = getattr(self, "_paused", {})
         self._paused[rid] = (req, jax.tree.structure(blk),
                              [(l.shape, l.dtype) for l in flat],
                              int(self.lengths[slot]))
@@ -139,9 +155,31 @@ class DecodeEngine:
         self.lengths[slot] = 0
         return self.store.tier_of(("kv", rid))
 
+    def prefetch(self, rid: str):
+        """Issue a paused session's KV restore asynchronously: the fetch
+        streams from its tier while decode steps keep advancing the clock.
+        Idempotent; returns the pending handle."""
+        if rid not in self._paused:
+            raise KeyError(rid)
+        if rid not in self._pending:
+            self._pending[rid] = self.store.get_async(("kv", rid))
+        return self._pending[rid]
+
+    def prefetch_many(self, rids):
+        """Batched async restore: issue all fetches back-to-back so the
+        flash queue pipelines them (miss-under-miss)."""
+        return [self.prefetch(r) for r in rids]
+
     def resume(self, rid: str):
+        """Re-admit a paused session. Blocks only on the unfinished part
+        of its (pre)fetch; the stall lands in `kv_stall_time`."""
         req, treedef, shapes, length = self._paused.pop(rid)
-        blob = self.store.get(("kv", rid))
+        pf = self._pending.pop(rid, None)
+        if pf is None:
+            pf = self.store.get_async(("kv", rid))
+        t0 = self.clock.now()
+        blob = pf.wait()
+        self.kv_stall_time += self.clock.now() - t0
         leaves, off = [], 0
         for shape, dtype in shapes:
             n = int(np.prod(shape))
@@ -181,6 +219,9 @@ class DecodeEngine:
             index=idx)
         logits = np.asarray(logits)
         self.steps += 1
+        if self.step_time:
+            # modeled decode compute overlaps in-flight KV transfers
+            self.store.runtime.advance(self.step_time)
         for slot, req in list(self.slot_req.items()):
             if not self.live[slot]:
                 continue

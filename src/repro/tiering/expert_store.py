@@ -10,6 +10,13 @@ streamed on demand.
 converts them to reuse intervals, and maintains residency through the
 shared TieredStore. `residency_plan` also answers the provisioning
 question: how much HBM/DRAM do we need for a target hit rate.
+
+Expert streaming rides the same async movement engine as serving KV:
+`prefetch_experts` issues non-blocking fetches for the experts the
+router just selected for the *next* layer/step, and `fetch_expert`
+blocks only on the unfinished remainder — cold-expert flash reads
+overlap with the current layer's compute, with queueing-aware service
+times from the calibrated ssdsim model.
 """
 from __future__ import annotations
 
@@ -19,17 +26,19 @@ from typing import Dict, Optional
 import numpy as np
 
 from ..core.policy import Tier, TieringPolicy
-from ..runtime.tiers import TieredStore
+from ..runtime.tiers import PendingFetch, TieredStore
 
 
 class ExpertStore:
     def __init__(self, n_layers: int, n_experts: int,
                  policy: TieringPolicy, store: Optional[TieredStore] = None,
-                 expert_bytes: float = 0.0):
+                 expert_bytes: float = 0.0, clock=None):
         self.n_layers = n_layers
         self.n_experts = n_experts
         self.policy = policy
-        self.store = store or TieredStore(policy)
+        self.store = store or TieredStore(policy, clock=clock)
+        self.clock = self.store.clock
+        self._pending: Dict[tuple, PendingFetch] = {}
         self.expert_bytes = expert_bytes
         self.counts = np.zeros((n_layers, n_experts), np.int64)
         self.steps = 0
@@ -78,7 +87,9 @@ class ExpertStore:
         return plan
 
     def apply_plan(self, weights: Dict, step_time: float):
-        """Move actual expert weight blobs between tiers per the plan."""
+        """Move actual expert weight blobs between tiers per the plan
+        (movement is queued on the async runtime — it streams behind
+        compute rather than blocking the step)."""
         plan = self.residency_plan(step_time)
         tiers = plan["tiers"]
         for (layer, e), blob in weights.items():
@@ -87,5 +98,27 @@ class ExpertStore:
             if cur is None:
                 self.store.put((layer, e), blob, tier=want)
             elif cur != want:
-                self.store._move((layer, e), cur, want)
+                self.store.move((layer, e), want)
         return plan
+
+    # ------------------------------------------------------------ streaming
+    def prefetch_experts(self, layer: int, expert_ids) -> int:
+        """Issue async fetches for `expert_ids` of `layer`; returns how
+        many fetches were actually started (resident-pending ones skip)."""
+        started = 0
+        for e in np.unique(np.asarray(expert_ids).ravel()):
+            key = (layer, int(e))
+            if key in self._pending or self.store.tier_of(key) is None:
+                continue
+            self._pending[key] = self.store.get_async(key)
+            started += 1
+        return started
+
+    def fetch_expert(self, layer: int, expert: int) -> np.ndarray:
+        """Blocking access to one expert's weights; only the unfinished
+        part of a prior prefetch stalls."""
+        key = (layer, int(expert))
+        pf = self._pending.pop(key, None)
+        if pf is None:
+            pf = self.store.get_async(key)
+        return pf.wait()

@@ -1,0 +1,105 @@
+"""Minimal deterministic stand-in for `hypothesis` used when the real
+package is absent (this container pins its env; see requirements-dev.txt
+for the real dependency).
+
+Implements exactly the subset this suite uses — `given`, `settings`, and
+the `floats` / `integers` / `sampled_from` / `lists` / `tuples`
+strategies — by drawing `max_examples` samples from a fixed-seed PRNG and
+running the test once per sample. Property coverage is preserved (the
+tests still execute on many generated inputs); what is lost versus real
+hypothesis is shrinking and the example database, which is acceptable for
+a CI fallback. `tests/conftest.py` installs this into `sys.modules` only
+when `import hypothesis` fails.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_SEED = 0xA11CE
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 - mimics the `hypothesis.strategies` module
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        lo, hi = float(min_value), float(max_value)
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30):
+        lo, hi = int(min_value), int(max_value)
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    @staticmethod
+    def sampled_from(seq):
+        pool = list(seq)
+        return _Strategy(lambda rng: rng.choice(pool))
+
+    @staticmethod
+    def tuples(*strats):
+        return _Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=None):
+        max_size = min_size + 8 if max_size is None else max_size
+        return _Strategy(lambda rng: [
+            elements.example(rng)
+            for _ in range(rng.randint(min_size, max_size))])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def settings(max_examples=100, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        # positional strategies bind to the rightmost parameters (as in
+        # real hypothesis); keyword strategies bind by name
+        nonself = [p for p in sig.parameters if p != "self"]
+        pos_names = nonself[len(nonself) - len(arg_strats):] \
+            if arg_strats else []
+        strats = dict(zip(pos_names, arg_strats), **kw_strats)
+
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_shim_max_examples", None) \
+                or getattr(fn, "_shim_max_examples", None) or 20
+            rng = random.Random(_SEED ^ len(fn.__name__)
+                                ^ sum(map(ord, fn.__name__)))
+            for _ in range(n):
+                ex = {k: s.example(rng) for k, s in strats.items()}
+                fn(*args, **kwargs, **ex)
+
+        # pytest inspects the signature for fixture injection: hide the
+        # drawn parameters, keep `self` and any genuine fixtures
+        visible = [p for name, p in sig.parameters.items()
+                   if name not in strats]
+        runner.__signature__ = sig.replace(parameters=visible)
+        return runner
+    return deco
+
+
+def assume(condition) -> bool:
+    """Best-effort: real hypothesis aborts the example; the shim cannot
+    unwind mid-test, so violations just pass the example through."""
+    return bool(condition)
+
+
+st = strategies
