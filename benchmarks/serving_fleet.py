@@ -1,0 +1,107 @@
+"""Fleet-scale sharded serving benchmark (multi-host tiering fabric).
+
+Sweeps host count x session-popularity skew on the sharded
+`ShardedTieredStore` fabric: sessions pause on one host and resume on
+another, so KV restores compose the NIC transfer tier with the owner
+host's calibrated flash queue. For every cell the sync restore path is
+compared against async cross-host prefetch on the identical seeded
+schedule, and the JSON trajectory (one record per cell, both modes +
+stall speedup) is printed/written.
+
+Everything runs on one shared VirtualClock with fixed seeds, so the
+emitted JSON is byte-identical across runs — CI executes `--smoke`
+twice and diffs the outputs as a determinism gate.
+
+  PYTHONPATH=src python benchmarks/serving_fleet.py --smoke
+  PYTHONPATH=src python benchmarks/serving_fleet.py --hosts 2,4,8 \
+      --skew 0.0,1.2 --out fleet.json
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.serving.bench import compare_fleet  # noqa: E402
+
+
+def run_sweep(hosts, skews, *, n_sessions, rounds, kv_bytes, decode_steps,
+              step_time, lead, seed):
+    trajectory = []
+    for h in hosts:
+        for sk in skews:
+            cell = compare_fleet(
+                n_hosts=h, n_sessions=n_sessions, rounds=rounds,
+                kv_bytes=kv_bytes, decode_steps=decode_steps,
+                step_time=step_time, lead=lead, skew=sk, seed=seed)
+            trajectory.append({"hosts": h, "skew": sk, **cell})
+    return trajectory
+
+
+# defaults per mode; an explicitly-passed flag always overrides either
+_FULL = dict(hosts="2,4,8", skew="0.0,1.2", sessions=16, rounds=2,
+             kv_mib=1.0, decode_steps=16, step_time_ms=2.0, lead=8)
+_SMOKE = dict(hosts="4", skew="0.0,1.2", sessions=8, rounds=2,
+              kv_mib=0.5, decode_steps=8, step_time_ms=2.0, lead=6)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hosts", default=None,
+                    help=f"comma-separated host counts "
+                         f"(default {_FULL['hosts']}; smoke "
+                         f"{_SMOKE['hosts']})")
+    ap.add_argument("--skew", default=None,
+                    help="comma-separated Zipf skews")
+    ap.add_argument("--sessions", type=int, default=None)
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--kv-mib", type=float, default=None)
+    ap.add_argument("--decode-steps", type=int, default=None)
+    ap.add_argument("--step-time-ms", type=float, default=None)
+    ap.add_argument("--lead", type=int, default=None,
+                    help="prefetch lead in decode steps")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast defaults (4 hosts) for CI "
+                         "determinism; explicit flags still apply")
+    ap.add_argument("--out", type=pathlib.Path, default=None,
+                    help="also write the JSON report here")
+    args = ap.parse_args()
+
+    base = _SMOKE if args.smoke else _FULL
+
+    def arg(name):
+        v = getattr(args, name)
+        return base[name] if v is None else v
+
+    hosts = [int(x) for x in str(arg("hosts")).split(",")]
+    skews = [float(x) for x in str(arg("skew")).split(",")]
+    params = dict(n_sessions=arg("sessions"), rounds=arg("rounds"),
+                  kv_bytes=int(arg("kv_mib") * 2**20),
+                  decode_steps=arg("decode_steps"),
+                  step_time=arg("step_time_ms") * 1e-3,
+                  lead=arg("lead"), seed=args.seed)
+
+    trajectory = run_sweep(hosts, skews, **params)
+    report = {"params": {**params, "hosts": hosts, "skews": skews},
+              "trajectory": trajectory}
+    js = json.dumps(report, sort_keys=True, indent=2)
+    if args.out:
+        args.out.write_text(js + "\n")
+    print(js)
+
+    print(f"\n{'hosts':>5s} {'skew':>5s} {'sync us/tok':>12s} "
+          f"{'async us/tok':>13s} {'speedup':>8s} {'remote':>7s}",
+          file=sys.stderr)
+    for rec in trajectory:
+        print(f"{rec['hosts']:5d} {rec['skew']:5.1f} "
+              f"{rec['sync']['per_token_stall']*1e6:12.1f} "
+              f"{rec['async']['per_token_stall']*1e6:13.1f} "
+              f"{rec['stall_speedup']:8.1f} "
+              f"{int(rec['async']['remote_fetches']):7d}",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,7 @@
 from .async_engine import AsyncTierRuntime, QueueStats, Transfer  # noqa
 from .clock import CallableClock, VirtualClock, WallClock, ensure_clock  # noqa
-from .service import FixedLatencyModel, Service, SsdQueueModel  # noqa
+from .fabric import (NIC, HostView, RemoteFetch,  # noqa
+                     ShardedTieredStore)
+from .service import (FixedLatencyModel, NetQueueModel, Service,  # noqa
+                      SsdQueueModel)
 from .tiers import PendingFetch, TierSpec, TierStats, TieredStore  # noqa

@@ -20,6 +20,14 @@ testing contract):
 
 Per-tier `QueueStats` record stall time and miss-under-miss occupancy so
 benchmarks can report modeled per-token stall under load.
+
+Queues are keyed by *lane*: any hashable key with a service model. The
+single-host `TieredStore` uses the `Tier` enum; the sharded fabric
+(`runtime.fabric`) adds per-host NIC lanes with a `NetQueueModel` on the
+same engine. `submit(..., not_before=t)` lets a transfer's start be
+gated on an upstream completion, which is how a remote fetch composes
+the remote host's flash service with the network service (the NIC
+transfer cannot start before the flash read delivers the bytes).
 """
 from __future__ import annotations
 
@@ -36,7 +44,7 @@ from .service import FixedLatencyModel, Service, SsdQueueModel
 class Transfer:
     key: object
     nbytes: int
-    tier: Tier
+    tier: object                 # lane key: a Tier, or e.g. a NIC lane
     kind: str                    # "fetch" | "promote" | "demote" | "write"
     issue_t: float
     start_t: float
@@ -79,10 +87,12 @@ class AsyncTierRuntime:
             # engine unless the caller explicitly injected a model
             service_models[Tier.FLASH] = SsdQueueModel.shared(sim_cfg)
         self.models = service_models
-        self._free: Dict[Tier, float] = {t: 0.0 for t in Tier}
-        self._inflight: Dict[Tier, List[Transfer]] = {t: [] for t in Tier}
-        self.qstats: Dict[Tier, QueueStats] = {t: QueueStats()
-                                               for t in Tier}
+        lanes = list(self.models)
+        self._free: Dict[object, float] = {t: 0.0 for t in lanes}
+        self._inflight: Dict[object, List[Transfer]] = {t: []
+                                                        for t in lanes}
+        self.qstats: Dict[object, QueueStats] = {t: QueueStats()
+                                                 for t in lanes}
         self._seq = itertools.count()
 
     # ----------------------------------------------------------------- time
@@ -94,22 +104,33 @@ class AsyncTierRuntime:
         return self.clock.advance(dt)
 
     # ---------------------------------------------------------------- queue
-    def _prune(self, tier: Tier):
+    def _prune(self, tier):
         now = self.clock.now()
         self._inflight[tier] = [tr for tr in self._inflight[tier]
                                 if not tr.is_done(now)]
 
-    def queue_depth(self, tier: Tier) -> int:
+    def queue_depth(self, tier) -> int:
         self._prune(tier)
         return len(self._inflight[tier])
 
+    def read_depth(self, tier) -> int:
+        """In-flight fetches on `tier` — the queue-depth forecast behind
+        write shielding (a fetch not yet done will still be contending
+        when a write submitted now would start)."""
+        self._prune(tier)
+        return sum(1 for tr in self._inflight[tier] if tr.kind == "fetch")
+
     # --------------------------------------------------------------- submit
-    def submit(self, tier: Tier, key, nbytes: int,
-               kind: str = "fetch") -> Transfer:
+    def submit(self, tier, key, nbytes: int, kind: str = "fetch",
+               not_before: Optional[float] = None) -> Transfer:
         now = self.clock.now()
         depth = self.queue_depth(tier)
         svc: Service = self.models[tier].service(nbytes, depth + 1)
         start = max(now, self._free[tier])
+        if not_before is not None:
+            # gate on an upstream completion (cross-host composition:
+            # the NIC transfer starts when the remote flash read is done)
+            start = max(start, float(not_before))
         done = start + svc.occupancy + svc.latency
         self._free[tier] = start + svc.occupancy
         tr = Transfer(key=key, nbytes=int(nbytes), tier=tier, kind=kind,
@@ -138,9 +159,9 @@ class AsyncTierRuntime:
         st.stall_time += stall
         return stall
 
-    def drain(self, tier: Optional[Tier] = None) -> float:
+    def drain(self, tier=None) -> float:
         """Advance to the completion of all in-flight transfers."""
-        tiers = [tier] if tier is not None else list(Tier)
+        tiers = [tier] if tier is not None else list(self._inflight)
         t_done = self.clock.now()
         for t in tiers:
             for tr in self._inflight[t]:
@@ -153,10 +174,11 @@ class AsyncTierRuntime:
     # --------------------------------------------------------------- report
     def report(self) -> str:
         lines = []
-        for t in Tier:
+        for t in self._inflight:
             st = self.qstats[t]
+            name = getattr(t, "name", str(t))
             lines.append(
-                f"{t.name:6s} xfers={st.submitted:6d} "
+                f"{name:6s} xfers={st.submitted:6d} "
                 f"stall={st.stall_time*1e3:9.3f}ms "
                 f"busy={st.busy_time*1e3:9.3f}ms "
                 f"mum={st.miss_under_miss:5d} maxQ={st.max_depth:3d}")

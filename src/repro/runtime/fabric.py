@@ -1,0 +1,313 @@
+"""ShardedTieredStore — the multi-host tiering fabric (scale-out of the
+paper's five-second rule to fleet serving).
+
+The hot set S(T) of millions of sessions does not fit one host: keys are
+sharded by consistent hashing over N per-host `TieredStore` instances,
+each with its own `AsyncTierRuntime` and HBM/DRAM/flash queues, so
+queueing on one host's Storage-Next SSD never perturbs another's. All
+hosts — and every per-host NIC lane — are driven by ONE shared clock
+(deterministic `VirtualClock` under test): a single `advance` models
+compute on the serving host while transfers stream concurrently on
+every host's flash and NIC queues, which is what makes cross-host
+prefetch overlap simulable and byte-reproducible.
+
+Network-tier service model: each host owns a NIC lane (an
+`AsyncTierRuntime` whose only service model is `NetQueueModel`) with the
+same occupancy/latency split as the flash tier — occupancy is the wire
+time at the bandwidth share the link sustains at the current in-flight
+depth (a single window-limited stream cannot saturate it), latency is
+the fixed cluster RTT. Occupancies serialize on the lane, RTTs pipeline.
+A remote fetch *composes* the two tiers: the owner host's flash read is
+issued normally, and the NIC transfer is issued in the same instant but
+gated with `not_before=flash.done_t` — it occupies a NIC queue slot
+immediately (depth-dependent bandwidth share, FIFO link order) yet
+cannot put bytes on the wire before the flash read delivers them. Data
+always crosses the *sender's* egress NIC: the owner's for fetches, the
+writing host's for cross-host puts.
+
+Admission control rides in from `TieredStore`: pass
+`write_shield_depth=k` and each host defers demotion writes while its
+flash tier has >= k fetches in flight (Flashield-style write shielding;
+deferral stats in each host's `TierStats`).
+
+Replication: `put(..., replicas=r)` places copies on the r distinct
+ring-successor hosts, and `get_async(..., from_host=h)` serves from h
+itself when it holds a replica (no network), else from the first
+replica in ring order — how `ExpertStore` shards replicated cold
+experts so popular ones are usually a local flash read.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.policy import Tier, TieringPolicy
+from .async_engine import AsyncTierRuntime, Transfer
+from .clock import ensure_clock
+from .service import NetQueueModel
+from .tiers import PendingFetch, TierSpec, TieredStore
+
+NIC = "NIC"                     # lane key on each host's NIC runtime
+
+
+def _key_digest(data: bytes) -> int:
+    return int.from_bytes(
+        hashlib.blake2b(data, digest_size=8).digest(), "big")
+
+
+@dataclasses.dataclass
+class RemoteFetch:
+    """Handle for a cross-host fetch: the owner host's flash/DRAM read
+    composed with the NIC transfer that starts when the read is done.
+    `wait()` yields the value after blocking on the *unfinished* part of
+    both stages — zero stall when enough compute overlapped."""
+    fabric: "ShardedTieredStore"
+    pf: PendingFetch
+    nic_tr: Transfer
+    owner: int
+
+    def done(self) -> bool:
+        return self.nic_tr.is_done(self.fabric.clock.now())
+
+    def wait(self) -> np.ndarray:
+        value = self.pf.wait()          # owner-store stats + policy move
+        self.fabric.nic[self.owner].wait(self.nic_tr)
+        return value
+
+
+class HostView:
+    """One host's façade over the fabric, duck-typing `TieredStore` so
+    `DecodeEngine` / `ExpertStore` run unmodified: every access routes
+    through the fabric with this host as `from_host` (and this view's
+    replication factor for puts)."""
+
+    def __init__(self, fabric: "ShardedTieredStore", host: int,
+                 replicas: int = 1):
+        self.fabric = fabric
+        self.host = host
+        self.replicas = replicas
+
+    @property
+    def clock(self):
+        return self.fabric.clock
+
+    @property
+    def runtime(self) -> AsyncTierRuntime:
+        return self.fabric.hosts[self.host].runtime
+
+    @property
+    def stats(self):
+        return self.fabric.hosts[self.host].stats
+
+    def put(self, key, value, tier: Tier = Tier.DRAM):
+        self.fabric.put(key, value, tier=tier, from_host=self.host,
+                        replicas=self.replicas)
+
+    def get(self, key):
+        return self.fabric.get(key, from_host=self.host)
+
+    def get_async(self, key):
+        return self.fabric.get_async(key, from_host=self.host)
+
+    def tier_of(self, key) -> Optional[Tier]:
+        return self.fabric.tier_of(key)
+
+    def move(self, key, dst: Tier):
+        self.fabric.move(key, dst)
+
+    def delete(self, key):
+        self.fabric.delete(key)
+
+
+class ShardedTieredStore:
+    """Consistent-hash-sharded multi-host TieredStore on one clock."""
+
+    def __init__(self, n_hosts: int, *, policy_factory=None,
+                 specs: Optional[Dict[Tier, TierSpec]] = None,
+                 clock=None, sim_cfg=None,
+                 net_model: Optional[NetQueueModel] = None,
+                 write_shield_depth: Optional[int] = None,
+                 vnodes: int = 64):
+        if n_hosts < 1:
+            raise ValueError("need at least one host")
+        self.n_hosts = n_hosts
+        self.clock = ensure_clock(clock)
+        if policy_factory is None:
+            policy_factory = lambda h: TieringPolicy(  # noqa: E731
+                tau_hot=0.05, tau_be=5.0)
+        self.hosts: List[TieredStore] = [
+            TieredStore(policy_factory(h), specs=specs, clock=self.clock,
+                        sim_cfg=sim_cfg,
+                        write_shield_depth=write_shield_depth)
+            for h in range(n_hosts)]
+        net_model = net_model or NetQueueModel()
+        self.nic: List[AsyncTierRuntime] = [
+            AsyncTierRuntime(clock=self.clock,
+                             service_models={NIC: net_model})
+            for _ in range(n_hosts)]
+        # consistent-hash ring: `vnodes` points per host keep the key
+        # split even and make host count changes remap only ~1/N of keys
+        points: List[Tuple[int, int]] = []
+        for h in range(n_hosts):
+            for v in range(vnodes):
+                points.append((_key_digest(f"host{h}/vn{v}".encode()), h))
+        points.sort()
+        self._ring_points = [p for p, _ in points]
+        self._ring_hosts = [h for _, h in points]
+        # fabric-level counters
+        self.local_fetches = 0
+        self.remote_fetches = 0
+        self.remote_puts = 0
+
+    # ------------------------------------------------------------- routing
+    def _key_point(self, key) -> int:
+        return _key_digest(repr(key).encode())
+
+    def owner(self, key) -> int:
+        return self.ring_hosts(key)[0]
+
+    def ring_hosts(self, key) -> List[int]:
+        """All hosts in ring order starting at the key's point (distinct,
+        length n_hosts) — replica placement and fetch-preference order."""
+        i = bisect.bisect_right(self._ring_points, self._key_point(key))
+        seen: List[int] = []
+        n = len(self._ring_hosts)
+        for j in range(n):
+            h = self._ring_hosts[(i + j) % n]
+            if h not in seen:
+                seen.append(h)
+                if len(seen) == self.n_hosts:
+                    break
+        return seen
+
+    def holders(self, key) -> List[int]:
+        """Hosts currently holding `key`, in ring-preference order."""
+        return [h for h in self.ring_hosts(key)
+                if self.hosts[h].tier_of(key) is not None]
+
+    # ------------------------------------------------------------------ api
+    def put(self, key, value, tier: Tier = Tier.DRAM, from_host: int = 0,
+            replicas: int = 1):
+        """Place `key` on its `replicas` ring-owner hosts. A copy bound
+        for a host other than `from_host` additionally streams over the
+        writer's egress NIC (non-blocking, like tier writes)."""
+        value = np.asarray(value)
+        targets = self.ring_hosts(key)[:max(1, min(replicas,
+                                                   self.n_hosts))]
+        # drop stale copies on hosts that are no longer targets
+        for h in self.holders(key):
+            if h not in targets:
+                self.hosts[h].delete(key)
+        for h in targets:
+            self.hosts[h].put(key, value, tier=tier)
+            if h != from_host:
+                self.nic[from_host].submit(NIC, key, value.nbytes,
+                                           kind="write")
+                self.remote_puts += 1
+
+    def get_async(self, key, from_host: int = 0):
+        """Issue a non-blocking fetch. Local replica -> the plain
+        single-host path; otherwise the remote composition of the owner
+        host's flash service and its egress NIC service."""
+        if self.hosts[from_host].tier_of(key) is not None:
+            self.local_fetches += 1
+            return self.hosts[from_host].get_async(key)
+        holders = self.holders(key)
+        if not holders:
+            raise KeyError(key)
+        owner = holders[0]
+        pf = self.hosts[owner].get_async(key)
+        nic_tr = self.nic[owner].submit(NIC, key, pf.value.nbytes,
+                                        kind="fetch",
+                                        not_before=pf.transfer.done_t)
+        # prefetch hit/late classification must see the COMPOSED
+        # completion (flash + NIC), not just the flash leg
+        pf.external_done_t = nic_tr.done_t
+        self.remote_fetches += 1
+        return RemoteFetch(fabric=self, pf=pf, nic_tr=nic_tr, owner=owner)
+
+    def get(self, key, from_host: int = 0) -> np.ndarray:
+        return self.get_async(key, from_host=from_host).wait()
+
+    def tier_of(self, key) -> Optional[Tier]:
+        for h in self.ring_hosts(key):
+            t = self.hosts[h].tier_of(key)
+            if t is not None:
+                return t
+        return None
+
+    def move(self, key, dst: Tier):
+        for h in self.holders(key):
+            self.hosts[h].move(key, dst)
+
+    def delete(self, key):
+        for h in self.holders(key):
+            self.hosts[h].delete(key)
+
+    def host_view(self, host: int, replicas: int = 1) -> HostView:
+        return HostView(self, host, replicas=replicas)
+
+    # ------------------------------------------------------------- control
+    def drain(self) -> float:
+        """Advance to the completion of every in-flight transfer on every
+        host (tier queues and NICs), flushing shielded writes. Draining
+        the tier queues completes the read bursts that shield deferred
+        demotion writes, so flushing happens *after* each drain pass and
+        the loop repeats until no transfer and no parked write remains."""
+        t = self.clock.now()
+        while True:
+            for store in self.hosts:
+                t = max(t, store.runtime.drain())
+            for nic in self.nic:
+                t = max(t, nic.drain())
+            if not any(store.flush_deferred_writes()
+                       or store.deferred_writes_pending
+                       for store in self.hosts):
+                return t
+
+    # --------------------------------------------------------------- stats
+    def summary(self) -> Dict[str, float]:
+        """Fabric-wide aggregates (plain floats — JSON/benchmark-ready)."""
+        out = {
+            "hosts": float(self.n_hosts),
+            "local_fetches": float(self.local_fetches),
+            "remote_fetches": float(self.remote_fetches),
+            "remote_puts": float(self.remote_puts),
+        }
+        agg = {"prefetch_hits": 0, "prefetch_late": 0, "demotions": 0,
+               "demotions_deferred": 0, "deferred_bytes": 0}
+        flash_stall = 0.0
+        for store in self.hosts:
+            for st in store.stats.values():
+                for k in agg:
+                    agg[k] += getattr(st, k)
+            flash_stall += store.stats[Tier.FLASH].stall_time
+        nic_stall = sum(n.qstats[NIC].stall_time for n in self.nic)
+        nic_bytes = sum(n.qstats[NIC].bytes_moved for n in self.nic)
+        out.update({k: float(v) for k, v in agg.items()})
+        out["flash_stall"] = flash_stall
+        out["nic_stall"] = nic_stall
+        out["nic_bytes"] = float(nic_bytes)
+        return out
+
+    def report(self) -> str:
+        lines = []
+        for h, store in enumerate(self.hosts):
+            nst = self.nic[h].qstats[NIC]
+            lines.append(f"host {h}:")
+            lines.append(store.report())
+            lines.append(
+                f"NIC    xfers={nst.submitted:6d} "
+                f"stall={nst.stall_time*1e3:9.3f}ms "
+                f"bytes={nst.bytes_moved/2**20:9.1f}MiB "
+                f"maxQ={nst.max_depth:3d}")
+        s = self.summary()
+        lines.append(
+            f"fabric local={int(s['local_fetches'])} "
+            f"remote={int(s['remote_fetches'])} "
+            f"deferred_demotions={int(s['demotions_deferred'])}")
+        return "\n".join(lines)

@@ -16,20 +16,35 @@ The runtime serializes occupancies (deeper queue -> longer waits) while
 latencies pipeline — exactly the behavior the DES exhibits, at a cost
 the serving hot loop can afford. DRAM/HBM keep the fixed-latency model
 (no deep queues at microsecond scales worth modeling here).
+`NetQueueModel` extends the same occupancy/latency split to the
+cross-host NIC tier of the sharded fabric (`runtime.fabric`): fixed RTT
+latency, wire occupancy at the bandwidth share the link sustains at the
+current in-flight depth.
 
 Calibration is deterministic (fixed sim seed) and cached per SimConfig,
-so tests pay it once per process.
+so tests pay it once per process. Set the `REPRO_SSDSIM_CACHE` env var
+to a directory to also persist calibration across processes (CI caches
+it between steps); cache files are keyed by a digest of the SimConfig,
+op count, depth ladder and a format version.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import math
+import os
+import pathlib
+import tempfile
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from ..ssdsim.config import SimConfig
-from ..ssdsim.engine import simulate_peak_iops
+from ..ssdsim.engine import simulate_latency, simulate_peak_iops
+
+CACHE_ENV = "REPRO_SSDSIM_CACHE"
+_CAL_VERSION = 2            # bump when the cached-file schema changes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +71,38 @@ class FixedLatencyModel:
                        latency=self.read_latency)
 
 
+class NetQueueModel:
+    """Cross-host NIC link service for the sharded fabric's transfer tier.
+
+    Same occupancy/latency split as `SsdQueueModel`, with the NIC's
+    queueing shape instead of flash's:
+
+      occupancy = nbytes / eff_bw(depth)   # wire time at the bandwidth
+                                           # share `depth` streams sustain
+      latency   = rtt                      # fixed propagation + protocol
+
+    A single stream is window-limited and cannot saturate the link;
+    aggregate effective bandwidth ramps linearly until `sat_depth`
+    concurrent transfers fill the pipe (the NIC analog of flash IOPS
+    rising with queue depth). Occupancies serialize on the link in the
+    runtime's queueing; RTT latencies pipeline. Defaults model a
+    100 Gb/s fleet NIC at ~25us intra-cluster RTT.
+    """
+
+    def __init__(self, rtt: float = 25e-6, bandwidth: float = 12.5e9,
+                 sat_depth: int = 4):
+        if rtt < 0 or bandwidth <= 0 or sat_depth < 1:
+            raise ValueError("invalid NIC parameters")
+        self.rtt = rtt
+        self.bandwidth = bandwidth
+        self.sat_depth = sat_depth
+
+    def service(self, nbytes: int, queue_depth: int) -> Service:
+        d = max(1, min(int(queue_depth), self.sat_depth))
+        eff_bw = self.bandwidth * (d / self.sat_depth)
+        return Service(occupancy=nbytes / eff_bw, latency=self.rtt)
+
+
 class SsdQueueModel:
     """Queue-depth-dependent flash service times from the ssdsim DES."""
 
@@ -71,6 +118,7 @@ class SsdQueueModel:
         self.n_ops = n_ops
         self._iops: Optional[np.ndarray] = None
         self._lat: Optional[np.ndarray] = None
+        self._p99: Optional[np.ndarray] = None
 
     @classmethod
     def shared(cls, sim_cfg: Optional[SimConfig] = None) -> "SsdQueueModel":
@@ -79,7 +127,60 @@ class SsdQueueModel:
             cls._cache[key] = cls(sim_cfg)
         return cls._cache[key]
 
+    # ------------------------------------------------------------ disk cache
+    def _cache_path(self) -> Optional[pathlib.Path]:
+        root = os.environ.get(CACHE_ENV)
+        if not root:
+            return None
+        spec = repr((self.cfg, self.n_ops, self.DEPTHS, _CAL_VERSION))
+        digest = hashlib.blake2b(spec.encode(), digest_size=12).hexdigest()
+        return pathlib.Path(root) / f"ssdcal-{digest}.json"
+
+    def _load_cached(self) -> bool:
+        path = self._cache_path()
+        if path is None or not path.is_file():
+            return False
+        try:
+            blob = json.loads(path.read_text())
+            iops = np.asarray(blob["iops"], float)
+            lat = np.asarray(blob["lat"], float)
+            if len(iops) != len(self.DEPTHS) or len(lat) != len(self.DEPTHS):
+                return False
+            p99 = blob.get("p99")
+            if p99 is not None:
+                p99 = np.asarray(p99, float)
+                if len(p99) != len(self.DEPTHS):
+                    p99 = None
+        except (ValueError, KeyError, TypeError, OSError):
+            # a corrupt or foreign file is a cache miss, never a crash
+            return False
+        self._iops = iops
+        self._lat = lat
+        self._p99 = p99
+        return True
+
+    def _save_cached(self):
+        path = self._cache_path()
+        if path is None:
+            return
+        blob = {"iops": [float(x) for x in self._iops],
+                "lat": [float(x) for x in self._lat]}
+        if self._p99 is not None:
+            blob["p99"] = [float(x) for x in self._p99]
+        try:
+            path.parent.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(blob, f, sort_keys=True)
+            os.replace(tmp, path)
+        except OSError:
+            pass                            # cache is best-effort only
+
+    # ------------------------------------------------------------ calibrate
     def _calibrate(self):
+        if self._load_cached():
+            self._xs = np.log2(np.asarray(self.DEPTHS, float))
+            return
         iops, lat = [], []
         for qd in self.DEPTHS:
             r = simulate_peak_iops(self.cfg, n_ops=self.n_ops,
@@ -87,16 +188,44 @@ class SsdQueueModel:
             # reads carry the fetch path; guard against degenerate mixes
             iops.append(max(r.iops * self.cfg.read_frac, 1.0))
             lat.append(max(r.mean_read_latency, 1e-9))
-        self._iops = np.asarray(iops)
-        self._lat = np.asarray(lat)
+        # Queueing theory guarantees throughput and mean latency are
+        # non-decreasing in offered depth; the finite-op DES can exhibit
+        # sub-sample-noise dips, so enforce isotonicity on the ladder
+        # (interpolated values then inherit the monotone property).
+        self._iops = np.maximum.accumulate(np.asarray(iops))
+        self._lat = np.maximum.accumulate(np.asarray(lat))
         self._xs = np.log2(np.asarray(self.DEPTHS, float))
+        self._save_cached()
 
-    def calibration(self) -> Dict[int, Tuple[float, float]]:
-        """(IOPS, mean latency) per calibrated depth — for reports."""
+    def _calibrate_p99(self):
+        """Open-loop tail percentiles per calibrated depth (the p99-aware
+        prefetch-lead prerequisite): drive the DES with Poisson arrivals
+        at the utilization each depth achieves (rho_d = IOPS(d)/IOPS(max))
+        and take the observed p99 read latency — the M/D/1-like tail at
+        that load, which the closed-loop mean cannot show."""
         if self._iops is None:
             self._calibrate()
-        return {d: (float(i), float(l)) for d, i, l in
-                zip(self.DEPTHS, self._iops, self._lat)}
+        if self._p99 is not None:
+            return
+        peak_total = float(self._iops[-1]) / max(self.cfg.read_frac, 1e-9)
+        p99 = []
+        for iops_d in self._iops:
+            rho = float(np.clip(iops_d / self._iops[-1], 0.02, 0.95))
+            r = simulate_latency(self.cfg, rho, n_ops=self.n_ops,
+                                 peak_iops=peak_total)
+            p99.append(max(r.p99_read_latency, 1e-9))
+        self._p99 = np.maximum.accumulate(np.asarray(p99))
+        self._save_cached()
+
+    def calibration(self) -> Dict[int, Tuple[float, float, float]]:
+        """(IOPS, mean latency, open-loop p99 latency) per calibrated
+        depth — for reports and prefetch-lead sizing."""
+        if self._iops is None:
+            self._calibrate()
+        if self._p99 is None:
+            self._calibrate_p99()
+        return {d: (float(i), float(l), float(p)) for d, i, l, p in
+                zip(self.DEPTHS, self._iops, self._lat, self._p99)}
 
     def service(self, nbytes: int, queue_depth: int) -> Service:
         if self._iops is None:

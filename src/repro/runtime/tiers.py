@@ -20,11 +20,26 @@ fixed scalar — and `get_async` exposes the split issue/wait form so
 callers (serving prefetch, expert streaming) can overlap fetches with
 compute. All timing flows through an injectable clock (deterministic
 `VirtualClock` by default; see `runtime.clock` for the testing contract).
+
+Admission control (Flashield-style write shielding): when constructed
+with `write_shield_depth=k`, a demotion's destination write is *deferred*
+while the destination tier has >= k fetches in flight — the queue-depth
+forecast says a read burst is underway and the write would inflate its
+tail. The object moves structurally at once (capacity accounting is
+immediate); only the queue charge parks in a deferred list, drained when
+the read depth falls below the threshold (checked on every subsequent
+store operation, or explicitly via `flush_deferred_writes`). Deferral
+counts land in `TierStats.demotions_deferred` / `deferred_bytes`.
+
+Capacity contract: an object larger than its target tier's capacity is
+demoted straight to the first tier that can hold it (ultimately FLASH,
+the capacity tier) instead of silently overcommitting; an object larger
+than every tier raises ValueError.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -52,6 +67,8 @@ class TierStats:
     demotions: int = 0
     prefetch_hits: int = 0      # async fetch finished before wait
     prefetch_late: int = 0      # wait still had to block
+    demotions_deferred: int = 0  # demotion writes parked by write shielding
+    deferred_bytes: int = 0      # bytes those parked writes will move
 
     @property
     def hit_rate(self) -> float:
@@ -62,15 +79,23 @@ class TierStats:
 @dataclasses.dataclass
 class PendingFetch:
     """Handle for an in-flight `get_async`; `wait()` yields the value and
-    records only the *residual* stall (zero when the fetch overlapped)."""
+    records only the *residual* stall (zero when the fetch overlapped).
+
+    `external_done_t` lets a composing layer (the fabric's remote fetch:
+    flash + NIC) extend the completion horizon so prefetch hit/late
+    classification reflects the full composition, not just this leg."""
     store: "TieredStore"
     key: object
     tier: Tier
     transfer: Transfer
     value: np.ndarray
+    external_done_t: Optional[float] = None
 
     def done(self) -> bool:
-        return self.transfer.is_done(self.store.clock.now())
+        done_t = self.transfer.done_t
+        if self.external_done_t is not None:
+            done_t = max(done_t, self.external_done_t)
+        return self.store.clock.now() >= done_t - 1e-12
 
     def wait(self) -> np.ndarray:
         self.store._finish_fetch(self)
@@ -83,7 +108,7 @@ class TieredStore:
     def __init__(self, policy: TieringPolicy,
                  specs: Optional[Dict[Tier, TierSpec]] = None,
                  clock=None, runtime: Optional[AsyncTierRuntime] = None,
-                 sim_cfg=None):
+                 sim_cfg=None, write_shield_depth: Optional[int] = None):
         # defaults: v5e-host-like HBM/DRAM plus a Storage-Next SSD tier
         self.specs = specs or {
             Tier.HBM: TierSpec(16e9, 819e9, 1e-7),
@@ -103,6 +128,11 @@ class TieredStore:
             t: {} for t in Tier}
         self._used = {t: 0 for t in Tier}
         self.stats: Dict[Tier, TierStats] = {t: TierStats() for t in Tier}
+        if write_shield_depth is not None and write_shield_depth < 1:
+            raise ValueError("write_shield_depth must be >= 1 (a zero "
+                             "threshold would shield forever)")
+        self.write_shield_depth = write_shield_depth
+        self._deferred_writes: List[Tuple[Tier, object, int]] = []
 
     # ----------------------------------------------------------------- util
     def tier_of(self, key) -> Optional[Tier]:
@@ -117,9 +147,11 @@ class TieredStore:
     # ------------------------------------------------------------------ api
     def put(self, key, value: np.ndarray, tier: Tier = Tier.DRAM):
         value = np.asarray(value)
+        self.flush_deferred_writes()
         cur = self.tier_of(key)
         if cur is not None:
             self._remove(key, cur)
+        tier = self._fit_tier(tier, value.nbytes)
         self._ensure_room(tier, value.nbytes)
         self._data[tier][key] = value
         self._used[tier] += value.nbytes
@@ -128,6 +160,7 @@ class TieredStore:
         self.policy.observe(key, now=self.clock.now())
 
     def _issue_fetch(self, key) -> PendingFetch:
+        self.flush_deferred_writes()
         cur = self.tier_of(key)
         if cur is None:
             raise KeyError(key)
@@ -160,6 +193,7 @@ class TieredStore:
         cur = self.tier_of(pf.key)
         if cur is not None and want != cur:
             self._move(pf.key, cur, want)
+        self.flush_deferred_writes()
 
     def get(self, key, now: Optional[float] = None) -> np.ndarray:
         """Synchronous fetch: blocks the clock for the full queueing-aware
@@ -182,6 +216,12 @@ class TieredStore:
     def _remove(self, key, tier: Tier):
         v = self._data[tier].pop(key)
         self._used[tier] -= v.nbytes
+        # a parked deferred write for this key is now stale (the object
+        # was deleted, overwritten or moved on): drop it so the shield
+        # never submits a phantom write for data that no longer exists
+        if self._deferred_writes:
+            self._deferred_writes = [e for e in self._deferred_writes
+                                     if e[1] != key]
         return v
 
     def move(self, key, dst: Tier):
@@ -195,25 +235,76 @@ class TieredStore:
 
     def _move(self, key, src: Tier, dst: Tier):
         v = self._remove(key, src)
+        dst = self._fit_tier(dst, v.nbytes)
+        if dst == src:
+            # an oversized promotion target redirected back onto the
+            # source tier: nothing to move
+            self._data[src][key] = v
+            self._used[src] += v.nbytes
+            return
         self._ensure_room(dst, v.nbytes)
         self._data[dst][key] = v
         self._used[dst] += v.nbytes
         self.stats[dst].bytes_written += v.nbytes
         self.stats[src].bytes_read += v.nbytes
-        kind = "promote" if dst < src else "demote"
+        demote = dst > src
         # movement occupies both queues: the read on the source tier
         # (a promotion out of flash contends with KV prefetches there)
         # and the write on the destination
-        self.runtime.submit(src, key, v.nbytes, kind=kind)
-        self.runtime.submit(dst, key, v.nbytes, kind="write")
-        if dst < src:
-            self.stats[dst].promotions += 1
+        self.runtime.submit(src, key, v.nbytes,
+                            kind="demote" if demote else "promote")
+        if demote and self._shielded(dst):
+            st = self.stats[dst]
+            st.demotions_deferred += 1
+            st.deferred_bytes += v.nbytes
+            self._deferred_writes.append((dst, key, v.nbytes))
         else:
+            self.runtime.submit(dst, key, v.nbytes, kind="write")
+        if demote:
             self.stats[dst].demotions += 1
+        else:
+            self.stats[dst].promotions += 1
+
+    # ----------------------------------------------------- write shielding
+    def _shielded(self, tier: Tier) -> bool:
+        return (self.write_shield_depth is not None
+                and self.runtime.read_depth(tier) >= self.write_shield_depth)
+
+    def flush_deferred_writes(self) -> int:
+        """Submit parked demotion writes whose destination read burst has
+        drained; returns how many were flushed. Entries for a still-
+        shielded tier stay parked (per-tier FIFO order preserved) without
+        blocking writes bound for other, unshielded tiers."""
+        flushed = 0
+        keep: List[Tuple[Tier, object, int]] = []
+        for dst, key, nbytes in self._deferred_writes:
+            if self._shielded(dst):
+                keep.append((dst, key, nbytes))
+            else:
+                self.runtime.submit(dst, key, nbytes, kind="write")
+                flushed += 1
+        self._deferred_writes = keep
+        return flushed
+
+    @property
+    def deferred_writes_pending(self) -> int:
+        return len(self._deferred_writes)
+
+    # ------------------------------------------------------------- capacity
+    def _fit_tier(self, tier: Tier, nbytes: int) -> Tier:
+        """First tier at or below `tier` whose capacity can hold the
+        object; raises if even the capacity tier cannot."""
+        for t in Tier:
+            if t >= tier and nbytes <= self.specs[t].capacity_bytes:
+                return t
+        raise ValueError(
+            f"object of {nbytes} bytes exceeds every tier's capacity")
 
     def _ensure_room(self, tier: Tier, nbytes: int):
         """Demote stalest residents until `nbytes` fits (FLASH never
-        evicts — it is the capacity tier)."""
+        evicts — it is the capacity tier). `_fit_tier` has already
+        guaranteed the object fits an empty `tier`, so the loop always
+        makes progress; the guard raise is defensive."""
         spec = self.specs[tier]
         while self._used[tier] + nbytes > spec.capacity_bytes \
                 and tier != Tier.FLASH:
@@ -223,7 +314,9 @@ class TieredStore:
             if not victims:
                 victims = list(self._data[tier])
             if not victims:
-                break
+                raise RuntimeError(
+                    f"cannot make room in {tier.name}: empty tier yet "
+                    f"{nbytes} bytes exceed capacity {spec.capacity_bytes}")
             self._move(victims[0], tier, Tier(tier + 1))
 
     # ---------------------------------------------------------------- report

@@ -12,6 +12,15 @@ Everything runs on a `VirtualClock` with queueing-aware flash service
 times from the calibrated ssdsim model, so the output is a deterministic
 *modeled* per-token stall — comparable across modes, independent of host
 speed. Run `benchmarks/serving_async.py` for the CLI report.
+
+`multi_host_session_bench` scales the same workload onto the sharded
+fabric: sessions pause on one host and resume on another (chosen by a
+seeded schedule, optionally Zipf-skewed toward hot sessions), so most
+restores cross the NIC transfer tier composed with the owner host's
+flash queue. Async mode prefetches the next turn's KV from the host
+that will serve it, `lead` decode steps before the current turn ends —
+the cross-host stream rides behind decode exactly like the single-host
+case. Run `benchmarks/serving_fleet.py` for the host-count x skew sweep.
 """
 from __future__ import annotations
 
@@ -21,6 +30,7 @@ import numpy as np
 
 from ..core.policy import Tier, TieringPolicy
 from ..runtime.clock import VirtualClock
+from ..runtime.fabric import ShardedTieredStore
 from ..runtime.tiers import TieredStore
 
 
@@ -93,3 +103,105 @@ def compare(**kw) -> Dict[str, Dict[str, float]]:
     """Run both modes on identical workloads; async must stall less."""
     return {"sync": multi_turn_session_bench("sync", **kw),
             "async": multi_turn_session_bench("async", **kw)}
+
+
+def _pinned_flash_policy(_host: int) -> TieringPolicy:
+    # thresholds pinned so session KV stays on the flash tier: the
+    # benchmark measures the restore path, not placement churn
+    return TieringPolicy(tau_hot=1e-12, tau_be=1e-9, ema_alpha=1.0)
+
+
+def multi_host_session_bench(mode: str = "async", *,
+                             n_hosts: int = 4,
+                             n_sessions: int = 16,
+                             rounds: int = 2,
+                             kv_bytes: int = 1 << 20,
+                             decode_steps: int = 16,
+                             step_time: float = 2e-3,
+                             lead: int = 8,
+                             skew: float = 0.0,
+                             seed: int = 0,
+                             sim_cfg=None, net_model=None,
+                             write_shield_depth=None) -> Dict[str, float]:
+    """Fleet serving on the sharded fabric's shared virtual clock.
+
+    Each turn resumes one session on one host: restore its KV through
+    the fabric (a cross-host NIC + remote-flash composition whenever the
+    serving host is not the shard owner), decode `decode_steps` tokens,
+    pause (KV streams back to the owner shard). The (session, host)
+    schedule is drawn up front from a seeded RNG — identical for both
+    modes — with session popularity Zipf-skewed by `skew` (0 = uniform).
+    Async mode issues the next turn's restore from the next serving
+    host's vantage point, `lead` steps before the current turn ends.
+    """
+    assert mode in ("sync", "async"), mode
+    clock = VirtualClock()
+    fabric = ShardedTieredStore(
+        n_hosts, policy_factory=_pinned_flash_policy, clock=clock,
+        sim_cfg=sim_cfg, net_model=net_model,
+        write_shield_depth=write_shield_depth)
+    blob = np.zeros(max(kv_bytes // 4, 1), np.float32)
+    keys = [("kv", f"s{i}") for i in range(n_sessions)]
+    for i, k in enumerate(keys):
+        fabric.put(k, blob, tier=Tier.FLASH, from_host=i % n_hosts)
+    fabric.drain()                      # start from quiesced queues
+
+    rng = np.random.default_rng(seed)
+    n_turns = rounds * n_sessions
+    w = np.power(np.arange(1, n_sessions + 1, dtype=float), -float(skew))
+    w /= w.sum()
+    sched = [(int(s), int(h)) for s, h in zip(
+        rng.choice(n_sessions, size=n_turns, p=w),
+        rng.integers(0, n_hosts, size=n_turns))]
+
+    total_stall = 0.0
+    tokens = 0
+    pending: Dict[int, object] = {}     # turn index -> fetch handle
+    prefetch_at = max(0, decode_steps - lead)
+    for t, (si, host) in enumerate(sched):
+        key = keys[si]
+        # --- restore -----------------------------------------------------
+        t0 = clock.now()
+        pf = pending.pop(t, None)
+        if pf is None:
+            pf = fabric.get_async(key, from_host=host)
+        pf.wait()
+        total_stall += clock.now() - t0
+        # --- decode, issuing the next turn's prefetch mid-turn -----------
+        for s in range(decode_steps):
+            if (mode == "async" and s == prefetch_at
+                    and t + 1 < n_turns and t + 1 not in pending):
+                nsi, nhost = sched[t + 1]
+                if fabric.tier_of(keys[nsi]) is not None:
+                    pending[t + 1] = fabric.get_async(
+                        keys[nsi], from_host=nhost)
+            clock.advance(step_time)
+        tokens += decode_steps
+        # --- pause (KV streams back to the owner shard) -------------------
+        fabric.put(key, blob, tier=Tier.FLASH, from_host=host)
+
+    s = fabric.summary()
+    out = {
+        "mode": mode,
+        "hosts": float(n_hosts),
+        "skew": float(skew),
+        "tokens": float(tokens),
+        "total_stall": total_stall,
+        "per_token_stall": total_stall / max(tokens, 1),
+        "makespan": clock.now(),
+    }
+    for k in ("local_fetches", "remote_fetches", "remote_puts",
+              "prefetch_hits", "prefetch_late", "demotions_deferred",
+              "nic_stall", "nic_bytes"):
+        out[k] = s[k]
+    return out
+
+
+def compare_fleet(**kw) -> Dict[str, object]:
+    """Both modes on the identical fleet schedule, plus the stall ratio
+    (sync per-token stall over async — the prefetch win at fleet scale)."""
+    sync = multi_host_session_bench("sync", **kw)
+    async_ = multi_host_session_bench("async", **kw)
+    speedup = sync["per_token_stall"] / max(async_["per_token_stall"],
+                                            1e-12)
+    return {"sync": sync, "async": async_, "stall_speedup": speedup}

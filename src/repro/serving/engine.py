@@ -24,6 +24,15 @@ Stall and miss-under-miss accounting land in the store's `TierStats` /
 the runtime's `QueueStats`; `kv_stall_time` totals the decode-visible
 stalls. The clock is injectable (deterministic `VirtualClock` default —
 see `repro.runtime.clock` for the testing contract).
+
+Multi-host mode (sharded fabric): construct with `fabric=` (a
+`repro.runtime.fabric.ShardedTieredStore`) and `host=` and the engine's
+store becomes that host's fabric view — KV blocks shard to their
+consistent-hash owner host, and a session paused on one host can resume
+on another: `export_session`/`import_session` hand the (tiny) session
+metadata between engines while the KV block itself streams cross-host
+through the fabric's NIC + remote-flash composition, behind decode when
+`prefetch` is issued with enough lead.
 """
 from __future__ import annotations
 
@@ -57,6 +66,7 @@ class DecodeEngine:
                  max_slots: int = 4, max_len: int = 256,
                  policy: Optional[TieringPolicy] = None,
                  store: Optional[TieredStore] = None,
+                 fabric=None, host: int = 0,
                  clock=None, step_time: float = 0.0,
                  compute_dtype=jnp.float32, greedy: bool = True):
         self.cfg = cfg
@@ -72,6 +82,9 @@ class DecodeEngine:
         self.live = np.zeros(max_slots, bool)
         self.slot_req: Dict[int, Request] = {}
         self.policy = policy or TieringPolicy(tau_hot=0.05, tau_be=5.0)
+        if store is None and fabric is not None:
+            store = fabric.host_view(host)
+        self.host = host
         self.store = store or TieredStore(self.policy, clock=clock)
         self.clock = self.store.clock
         self.step_time = step_time      # modeled seconds of decode compute
@@ -154,6 +167,25 @@ class DecodeEngine:
         self.live[slot] = False
         self.lengths[slot] = 0
         return self.store.tier_of(("kv", rid))
+
+    def export_session(self, rid: str):
+        """Hand a paused session off to another host's engine: returns
+        the session metadata (request + KV tree spec — a few hundred
+        bytes). The KV block itself stays in the tiered store/fabric and
+        streams to the resuming host on its `prefetch`/`resume`."""
+        # an issued prefetch belongs to this host's vantage point; just
+        # drop the handle — the in-flight transfer completes on its own
+        # in the background, and waiting here would advance the shared
+        # clock for data nobody will consume
+        self._pending.pop(rid, None)
+        return self._paused.pop(rid)
+
+    def import_session(self, rid: str, state):
+        """Adopt a session exported by another engine on the same store
+        or fabric; `prefetch`/`resume` then work as if paused here."""
+        if rid in self._paused:
+            raise KeyError(f"session {rid!r} already paused here")
+        self._paused[rid] = state
 
     def prefetch(self, rid: str):
         """Issue a paused session's KV restore asynchronously: the fetch

@@ -17,6 +17,13 @@ router just selected for the *next* layer/step, and `fetch_expert`
 blocks only on the unfinished remainder — cold-expert flash reads
 overlap with the current layer's compute, with queueing-aware service
 times from the calibrated ssdsim model.
+
+Fleet mode: construct with `fabric=` (a
+`repro.runtime.fabric.ShardedTieredStore`), `host=` and `replicas=` to
+shard replicated cold experts over the multi-host fabric — each expert
+lives on its `replicas` consistent-hash owner hosts, a selection served
+by a co-resident replica is a local flash read, and the rest stream
+over the NIC transfer tier composed with the remote host's flash.
 """
 from __future__ import annotations
 
@@ -32,10 +39,14 @@ from ..runtime.tiers import PendingFetch, TieredStore
 class ExpertStore:
     def __init__(self, n_layers: int, n_experts: int,
                  policy: TieringPolicy, store: Optional[TieredStore] = None,
+                 fabric=None, host: int = 0, replicas: int = 1,
                  expert_bytes: float = 0.0, clock=None):
         self.n_layers = n_layers
         self.n_experts = n_experts
         self.policy = policy
+        if store is None and fabric is not None:
+            store = fabric.host_view(host, replicas=replicas)
+        self.host = host
         self.store = store or TieredStore(policy, clock=clock)
         self.clock = self.store.clock
         self._pending: Dict[tuple, PendingFetch] = {}

@@ -1,0 +1,420 @@
+"""Sharded multi-host tiering fabric tests: consistent-hash routing
+stability, remote fetch = NIC + remote-flash service composition on the
+shared virtual clock, write-shielding admission control, replicated
+expert sharding, cross-host DecodeEngine pause/resume, and the fleet
+benchmark's >=5x async-prefetch stall win with byte-stable output."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.policy import Tier, TieringPolicy
+from repro.runtime.clock import VirtualClock
+from repro.runtime.fabric import (NIC, HostView, RemoteFetch,
+                                  ShardedTieredStore)
+from repro.runtime.service import NetQueueModel
+from repro.runtime.tiers import TierSpec, TieredStore
+from repro.serving.bench import compare_fleet, multi_host_session_bench
+from repro.tiering.expert_store import ExpertStore
+
+
+def _pinned(_h=0):
+    # thresholds pinned so objects stay where the test puts them
+    return TieringPolicy(tau_hot=1e-12, tau_be=1e-9, ema_alpha=1.0)
+
+
+def _fabric(n_hosts, **kw):
+    return ShardedTieredStore(n_hosts, policy_factory=_pinned,
+                              clock=VirtualClock(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# shard routing
+# ---------------------------------------------------------------------------
+
+def test_shard_routing_deterministic_and_balanced():
+    keys = [("kv", f"s{i}") for i in range(1000)]
+    a, b = _fabric(4), _fabric(4)
+    owners = [a.owner(k) for k in keys]
+    assert owners == [b.owner(k) for k in keys]   # instance-independent
+    counts = np.bincount(owners, minlength=4)
+    assert counts.min() > 0                        # every host owns keys
+    assert counts.max() < 2.5 * counts.min()       # vnodes keep it even
+
+
+def test_shard_routing_stable_under_host_growth():
+    """Consistent hashing: adding a host remaps only ~1/(N+1) of keys."""
+    keys = [("kv", f"s{i}") for i in range(1000)]
+    f4, f5 = _fabric(4), _fabric(5)
+    moved = sum(f4.owner(k) != f5.owner(k) for k in keys)
+    assert 0 < moved < 0.35 * len(keys)           # expected ~0.2
+    # surviving assignments are untouched, and every key is owned
+    assert all(0 <= f5.owner(k) < 5 for k in keys)
+
+
+def test_ring_hosts_distinct_and_start_at_owner():
+    fab = _fabric(4)
+    order = fab.ring_hosts(("kv", "x"))
+    assert sorted(order) == [0, 1, 2, 3]
+    assert order[0] == fab.owner(("kv", "x"))
+
+
+# ---------------------------------------------------------------------------
+# remote fetch composition
+# ---------------------------------------------------------------------------
+
+def _loaded_fabric(n_hosts=2, kv_bytes=1 << 20):
+    fab = _fabric(n_hosts)
+    key = ("kv", "s0")
+    fab.put(key, np.zeros(kv_bytes, np.uint8), tier=Tier.FLASH,
+            from_host=fab.owner(key))
+    fab.drain()
+    return fab, key
+
+
+def test_remote_fetch_composes_network_and_remote_flash():
+    fab, key = _loaded_fabric()
+    owner, other = fab.owner(key), 1 - fab.owner(key)
+    clock = fab.clock
+    rf = fab.get_async(key, from_host=other)
+    assert isinstance(rf, RemoteFetch)
+    # the NIC transfer is gated on the remote flash read's completion
+    assert rf.nic_tr.start_t >= rf.pf.transfer.done_t - 1e-12
+    assert rf.nic_tr.done_t > rf.pf.transfer.done_t
+    t0 = clock.now()
+    rf.wait()
+    assert clock.now() == pytest.approx(rf.nic_tr.done_t)
+    # composition: the synchronous remote stall covers flash + network
+    assert clock.now() - t0 == pytest.approx(rf.nic_tr.done_t - t0)
+    assert fab.nic[owner].qstats[NIC].submitted == 1
+    assert fab.nic[owner].qstats[NIC].bytes_moved == 1 << 20
+    assert fab.remote_fetches == 1 and fab.local_fetches == 0
+
+
+def test_remote_fetch_slower_than_local_fetch():
+    fab, key = _loaded_fabric()
+    clock = fab.clock
+    t0 = clock.now()
+    fab.get(key, from_host=fab.owner(key))
+    t_local = clock.now() - t0
+    fab.drain()
+    t0 = clock.now()
+    fab.get(key, from_host=1 - fab.owner(key))
+    t_remote = clock.now() - t0
+    assert t_remote > t_local > 0
+    assert fab.local_fetches == 1 and fab.remote_fetches == 1
+
+
+def test_remote_prefetch_streams_behind_decode():
+    fab, key = _loaded_fabric()
+    clock = fab.clock
+    rf = fab.get_async(key, from_host=1 - fab.owner(key))
+    fab.hosts[0].runtime.advance(0.05)     # modeled decode on the clock
+    t0 = clock.now()
+    rf.wait()
+    assert clock.now() == t0               # fully overlapped: zero stall
+    assert rf.done()
+
+
+def test_cross_host_put_charges_writer_egress_nic():
+    fab = _fabric(2)
+    key = ("kv", "remote-put")
+    writer = 1 - fab.owner(key)
+    fab.put(key, np.zeros(1 << 16, np.uint8), tier=Tier.FLASH,
+            from_host=writer)
+    assert fab.nic[writer].qstats[NIC].submitted == 1
+    assert fab.remote_puts == 1
+    assert fab.tier_of(key) == Tier.FLASH
+
+
+def test_fabric_get_missing_key_raises():
+    fab = _fabric(2)
+    with pytest.raises(KeyError):
+        fab.get_async(("kv", "nope"), from_host=0)
+
+
+# ---------------------------------------------------------------------------
+# write shielding (admission control)
+# ---------------------------------------------------------------------------
+
+def _shielded_store():
+    clock = VirtualClock()
+    store = TieredStore(_pinned(), specs={
+        Tier.HBM: TierSpec(1 << 20, 819e9, 1e-7),
+        Tier.DRAM: TierSpec(2 << 20, 45e9, 5e-7),
+        Tier.FLASH: TierSpec(1 << 30, 7e9, 2e-5),
+    }, clock=clock, write_shield_depth=2)
+    for i in range(3):
+        store.put(("cold", i), np.ones(1 << 18, np.uint8), tier=Tier.FLASH)
+    store.runtime.drain()
+    return store, clock
+
+
+def test_write_shield_defers_demotions_under_read_burst():
+    store, clock = _shielded_store()
+    # a read burst: three in-flight flash fetches (depth >= threshold 2)
+    burst = [store.get_async(("cold", i)) for i in range(3)]
+    assert store.runtime.read_depth(Tier.FLASH) == 3
+    # capacity pressure demotes DRAM residents into the burst
+    store.put(("hot", 0), np.ones(1 << 20, np.uint8), tier=Tier.DRAM)
+    store.put(("hot", 1), np.ones(1 << 20, np.uint8), tier=Tier.DRAM)
+    store.put(("hot", 2), np.ones(1 << 20, np.uint8), tier=Tier.DRAM)
+    st = store.stats[Tier.FLASH]
+    assert st.demotions > 0
+    assert st.demotions_deferred > 0        # writes parked, not queued
+    assert st.deferred_bytes > 0
+    assert store.deferred_writes_pending == st.demotions_deferred
+    # the burst drains -> the parked writes flush automatically
+    for pf in burst:
+        pf.wait()
+    assert store.runtime.read_depth(Tier.FLASH) == 0
+    assert store.deferred_writes_pending == 0
+
+
+def test_fabric_drain_flushes_shielded_writes():
+    """drain() must leave no parked write behind: the drain itself
+    completes the read burst, so the flush happens after it."""
+    fab = _fabric(1, write_shield_depth=1)
+    store = fab.hosts[0]
+    store.specs[Tier.DRAM] = TierSpec(1 << 20, 45e9, 5e-7)
+    fab.put(("cold", 0), np.ones(1 << 18, np.uint8), tier=Tier.FLASH)
+    fab.drain()
+    pf = fab.get_async(("cold", 0), from_host=0)   # read in flight
+    fab.put(("hot", 0), np.ones(1 << 20, np.uint8), tier=Tier.DRAM)
+    fab.put(("hot", 1), np.ones(1 << 20, np.uint8), tier=Tier.DRAM)
+    assert store.deferred_writes_pending > 0
+    fab.drain()
+    assert store.deferred_writes_pending == 0
+    pf.wait()
+
+
+def test_remote_prefetch_late_when_nic_leg_uncovered():
+    """A lead that covers the remote flash read but not the NIC transfer
+    is a LATE prefetch — classification sees the full composition."""
+    slow_net = ShardedTieredStore(
+        2, policy_factory=_pinned, clock=VirtualClock(),
+        net_model=NetQueueModel(rtt=1e-3, bandwidth=1e8, sat_depth=1))
+    key = ("kv", "s0")
+    owner = slow_net.owner(key)
+    slow_net.put(key, np.zeros(1 << 20, np.uint8), tier=Tier.FLASH,
+                 from_host=owner)
+    slow_net.drain()
+    rf = slow_net.get_async(key, from_host=1 - owner)
+    # advance past the flash leg but not the ~10ms NIC leg
+    gap = rf.pf.transfer.done_t - slow_net.clock.now()
+    slow_net.hosts[0].runtime.advance(gap * 1.01)
+    assert rf.pf.transfer.is_done(slow_net.clock.now())
+    assert not rf.done()
+    t0 = slow_net.clock.now()
+    rf.wait()
+    assert slow_net.clock.now() > t0               # NIC residual stalled
+    st = slow_net.hosts[owner].stats[Tier.FLASH]
+    assert st.prefetch_late == 1 and st.prefetch_hits == 0
+
+
+def test_flush_deferred_not_head_of_line_blocked():
+    """A parked write for a still-shielded tier must not block parked
+    writes bound for other tiers whose read bursts have drained."""
+    store = TieredStore(_pinned(), specs={
+        Tier.HBM: TierSpec(1 << 20, 819e9, 1e-7),
+        Tier.DRAM: TierSpec(2 << 20, 45e9, 5e-7),
+        Tier.FLASH: TierSpec(1 << 30, 7e9, 2e-5),
+    }, clock=VirtualClock(), write_shield_depth=1)
+    store.put("f", np.ones(1 << 18, np.uint8), tier=Tier.FLASH)
+    store.put("d", np.ones(1 << 18, np.uint8), tier=Tier.DRAM)
+    store.runtime.drain()
+    pf_flash = store.get_async("f")     # shields FLASH (slow read)
+    pf_dram = store.get_async("d")      # shields DRAM (fast read)
+    # DRAM pressure defers FLASH-bound demotion writes...
+    store.put(("x", 0), np.ones(1 << 20, np.uint8), tier=Tier.DRAM)
+    store.put(("x", 1), np.ones(1 << 20, np.uint8), tier=Tier.DRAM)
+    # ...then HBM pressure defers DRAM-bound ones behind them
+    for i in range(3):
+        store.put(("h", i), np.ones(1 << 19, np.uint8), tier=Tier.HBM)
+    dsts = {d for d, _, _ in store._deferred_writes}
+    assert dsts == {Tier.FLASH, Tier.DRAM}
+    # the DRAM read finishes long before the flash one: its wait flushes
+    # the DRAM-bound writes even though FLASH entries head the list
+    pf_dram.wait()
+    dsts = {d for d, _, _ in store._deferred_writes}
+    assert Tier.DRAM not in dsts and Tier.FLASH in dsts
+    pf_flash.wait()
+    assert store.deferred_writes_pending == 0
+
+
+def test_deleted_key_cancels_parked_deferred_write():
+    """delete()/overwrite of a key with a parked demotion write must not
+    leave a phantom flash write behind for the drained shield to submit."""
+    store, clock = _shielded_store()
+    burst = [store.get_async(("cold", i)) for i in range(3)]
+    store.put(("hot", 0), np.ones(1 << 20, np.uint8), tier=Tier.DRAM)
+    store.put(("hot", 1), np.ones(1 << 20, np.uint8), tier=Tier.DRAM)
+    store.put(("hot", 2), np.ones(1 << 20, np.uint8), tier=Tier.DRAM)
+    assert store.deferred_writes_pending > 0
+    parked_keys = [k for _, k, _ in store._deferred_writes]
+    for k in parked_keys:
+        store.delete(k)
+    assert store.deferred_writes_pending == 0
+    for pf in burst:
+        pf.wait()
+    assert store.flush_deferred_writes() == 0   # nothing phantom to flush
+
+
+def test_write_shield_off_by_default():
+    clock = VirtualClock()
+    store = TieredStore(_pinned(), clock=clock)
+    store.put("a", np.ones(1 << 16, np.uint8), tier=Tier.FLASH)
+    assert store.write_shield_depth is None
+    assert store.deferred_writes_pending == 0
+    with pytest.raises(ValueError):
+        TieredStore(_pinned(), clock=VirtualClock(), write_shield_depth=0)
+
+
+def test_fleet_bench_surfaces_deferral_stats():
+    r = multi_host_session_bench("async", n_hosts=2, n_sessions=4,
+                                 rounds=1, kv_bytes=1 << 18,
+                                 decode_steps=4, step_time=1e-3, lead=2,
+                                 write_shield_depth=2)
+    assert "demotions_deferred" in r       # surfaced even when zero
+
+
+# ---------------------------------------------------------------------------
+# replicated expert sharding over the fabric
+# ---------------------------------------------------------------------------
+
+def test_expert_store_shards_replicated_cold_experts():
+    fab = _fabric(4)
+    es = ExpertStore(n_layers=1, n_experts=8, policy=_pinned(),
+                     fabric=fab, host=0, replicas=2)
+    w = np.arange(32 * 32, dtype=np.float32).reshape(32, 32)
+    for e in range(8):
+        es.store.put((0, e), w, tier=Tier.FLASH)
+    fab.drain()
+    # every expert lives on exactly its two ring-owner hosts
+    for e in range(8):
+        holders = fab.holders((0, e))
+        assert holders == fab.ring_hosts((0, e))[:2]
+    # streaming: prefetch all, overlap, fetch without residual stall
+    assert es.prefetch_experts(0, list(range(8))) == 8
+    fab.hosts[0].runtime.advance(1.0)
+    t0 = es.clock.now()
+    for e in range(8):
+        np.testing.assert_array_equal(es.fetch_expert(0, e), w)
+    assert es.clock.now() == t0            # all overlapped
+    # host 0 serves co-resident replicas locally, the rest remotely
+    expect_local = sum(0 in fab.ring_hosts((0, e))[:2] for e in range(8))
+    assert fab.local_fetches == expect_local
+    assert fab.remote_fetches == 8 - expect_local
+
+
+def test_host_view_ducktypes_tiered_store():
+    fab = _fabric(2)
+    view = fab.host_view(0)
+    assert isinstance(view, HostView)
+    key = ("obj", 1)
+    view.put(key, np.ones(64, np.float32), tier=Tier.FLASH)
+    assert view.tier_of(key) == Tier.FLASH
+    np.testing.assert_array_equal(view.get(key), np.ones(64, np.float32))
+    view.delete(key)
+    assert view.tier_of(key) is None
+    assert view.clock is fab.clock
+    assert view.runtime is fab.hosts[0].runtime
+
+
+# ---------------------------------------------------------------------------
+# fleet serving benchmark (tentpole acceptance)
+# ---------------------------------------------------------------------------
+
+_FLEET_KW = dict(n_hosts=4, n_sessions=8, rounds=2, kv_bytes=1 << 19,
+                 decode_steps=8, step_time=2e-3, lead=6, skew=1.2)
+
+
+def test_fleet_bench_async_prefetch_5x_lower_stall():
+    r = compare_fleet(**_FLEET_KW)
+    assert r["sync"]["remote_fetches"] > 0          # truly cross-host
+    assert r["async"]["prefetch_hits"] > 0
+    assert r["async"]["tokens"] == r["sync"]["tokens"]   # fair compare
+    assert r["stall_speedup"] >= 5.0
+
+
+def test_fleet_bench_deterministic_and_json_stable():
+    a, b = compare_fleet(**_FLEET_KW), compare_fleet(**_FLEET_KW)
+    assert a == b
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_fleet_cli_smoke_respects_explicit_flags():
+    """--smoke sets fast defaults but an explicit flag (here --lead 0,
+    the degenerate no-prefetch check) must win over them."""
+    import subprocess
+    import sys
+    import pathlib
+    script = pathlib.Path(__file__).resolve().parents[1] / \
+        "benchmarks" / "serving_fleet.py"
+    out = subprocess.run(
+        [sys.executable, str(script), "--smoke", "--lead", "0",
+         "--sessions", "2", "--rounds", "1", "--decode-steps", "2",
+         "--kv-mib", "0.05", "--skew", "0.0"],
+        capture_output=True, text=True, check=True)
+    report = json.loads(out.stdout)
+    assert report["params"]["lead"] == 0
+    assert report["params"]["n_sessions"] == 2
+    for rec in report["trajectory"]:
+        # lead 0 never issues a prefetch: async degenerates to sync
+        assert rec["async"]["prefetch_hits"] == 0
+        assert rec["stall_speedup"] == pytest.approx(1.0)
+
+
+def test_fleet_bench_skew_changes_schedule_not_tokens():
+    flat = multi_host_session_bench("async", **{**_FLEET_KW, "skew": 0.0})
+    hot = multi_host_session_bench("async", **_FLEET_KW)
+    assert flat["tokens"] == hot["tokens"]
+    assert flat["skew"] == 0.0 and hot["skew"] == 1.2
+
+
+# ---------------------------------------------------------------------------
+# cross-host DecodeEngine pause/resume (KV streamed behind decode)
+# ---------------------------------------------------------------------------
+
+def test_engine_cross_host_pause_resume_streams_kv():
+    import jax
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.parallel.sharding import single_device_rules
+    from repro.serving.engine import DecodeEngine, Request
+
+    cfg = get_config("gemma-2b", reduced=True)
+    rules = single_device_rules()
+    params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
+    clock = VirtualClock()
+    fab = ShardedTieredStore(2, policy_factory=_pinned, clock=clock)
+    # pick a session whose KV shard-owner is host 0, then serve the
+    # resume on host 1 so the restore must cross the NIC tier
+    rid = next(f"s{i}" for i in range(64)
+               if fab.owner(("kv", f"s{i}")) == 0)
+    eng0 = DecodeEngine(cfg, params, rules, max_slots=2, max_len=64,
+                        fabric=fab, host=0, step_time=1e-3)
+    eng1 = DecodeEngine(cfg, params, rules, max_slots=2, max_len=64,
+                        fabric=fab, host=1, step_time=1e-3)
+    rng = np.random.default_rng(0)
+    req = Request(rid=rid, prompt=rng.integers(
+        1, cfg.vocab, 6).astype(np.int32), max_new=8)
+    eng0.admit(req)
+    for _ in range(3):
+        eng0.step()
+    eng0.pause(rid)
+    assert fab.hosts[0].tier_of(("kv", rid)) is not None
+    # hand the session to host 1: metadata moves, KV streams via fabric
+    state = eng0.export_session(rid)
+    eng1.import_session(rid, state)
+    with pytest.raises(KeyError):
+        eng1.import_session(rid, state)     # double adoption rejected
+    eng1.prefetch(rid)
+    clock.advance(1.0)                      # decode elsewhere overlaps
+    stall_before = eng1.kv_stall_time
+    eng1.resume(rid)
+    assert eng1.kv_stall_time == stall_before    # prefetch covered it
+    assert fab.remote_fetches >= 1
+    while not req.done:
+        eng1.step()
+    assert len(req.generated) == 8
