@@ -1,7 +1,7 @@
 from .async_engine import AsyncTierRuntime, QueueStats, Transfer  # noqa
 from .clock import CallableClock, VirtualClock, WallClock, ensure_clock  # noqa
-from .fabric import (NIC, HostView, RemoteFetch,  # noqa
+from .fabric import (NIC, HostView, RebalanceStats, RemoteFetch,  # noqa
                      ShardedTieredStore)
-from .service import (FixedLatencyModel, NetQueueModel, Service,  # noqa
-                      SsdQueueModel)
+from .service import (FabricTopology, FixedLatencyModel,  # noqa
+                      NetQueueModel, Service, SsdQueueModel)
 from .tiers import PendingFetch, TierSpec, TierStats, TieredStore  # noqa

@@ -122,10 +122,18 @@ class AsyncTierRuntime:
 
     # --------------------------------------------------------------- submit
     def submit(self, tier, key, nbytes: int, kind: str = "fetch",
-               not_before: Optional[float] = None) -> Transfer:
+               not_before: Optional[float] = None,
+               ctx: Optional[dict] = None) -> Transfer:
         now = self.clock.now()
         depth = self.queue_depth(tier)
-        svc: Service = self.models[tier].service(nbytes, depth + 1)
+        # `ctx` carries service context a model may be keyed on beyond
+        # queue depth (the topology-aware NIC model's src/dst/fan_in);
+        # models that don't take it are simply never handed one
+        if ctx:
+            svc: Service = self.models[tier].service(nbytes, depth + 1,
+                                                     **ctx)
+        else:
+            svc = self.models[tier].service(nbytes, depth + 1)
         start = max(now, self._free[tier])
         if not_before is not None:
             # gate on an upstream completion (cross-host composition:
@@ -170,6 +178,11 @@ class AsyncTierRuntime:
         for t in tiers:
             self._prune(t)
         return t_done
+
+    def reset_stats(self):
+        """Fresh `QueueStats` on every lane; in-flight transfers and lane
+        free times are structural state and stay untouched."""
+        self.qstats = {t: QueueStats() for t in self.qstats}
 
     # --------------------------------------------------------------- report
     def report(self) -> str:

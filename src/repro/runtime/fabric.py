@@ -25,6 +25,24 @@ cannot put bytes on the wire before the flash read delivers them. Data
 always crosses the *sender's* egress NIC: the owner's for fetches, the
 writing host's for cross-host puts.
 
+Topology mode: pass `topology=FabricTopology(...)` (or a `net_model`
+with one attached) and the single uniform link becomes per-pair — an
+intra-rack hop gets the short ToR RTT at full NIC bandwidth, a
+cross-rack hop the longer spine RTT at the oversubscribed uplink share,
+and high fan-in into one destination divides its ingress bandwidth (the
+incast penalty). The fabric tracks in-flight flows per destination and
+hands the model `src`/`dst`/`fan_in` on every NIC submit.
+
+Elasticity: `add_host()` / `remove_host(h)` recompute the consistent-
+hash ring (vnodes keep the remap at ~1/N of resident keys) and stream
+only the remapped keys as background rebalance transfers on the shared
+clock — a flash read on a current holder, the sender's egress NIC
+(gated on the read), and a destination placement whose write charge is
+subject to the destination's write shielding exactly like a demotion.
+Each call returns a `RebalanceStats` (keys/bytes moved vs resident) so
+benchmarks can price the rebalance tax in stall per token; serving
+continues throughout, it only queues behind the rebalance traffic.
+
 Admission control rides in from `TieredStore`: pass
 `write_shield_depth=k` and each host defers demotion writes while its
 flash tier has >= k fetches in flight (Flashield-style write shielding;
@@ -34,7 +52,16 @@ Replication: `put(..., replicas=r)` places copies on the r distinct
 ring-successor hosts, and `get_async(..., from_host=h)` serves from h
 itself when it holds a replica (no network), else from the first
 replica in ring order — how `ExpertStore` shards replicated cold
-experts so popular ones are usually a local flash read.
+experts so popular ones are usually a local flash read. The requested
+`r` is remembered per key, so rebalancing after a join can restore a
+replication degree the old host count could not hold.
+
+Locality-aware scheduling: `preferred_host(key)` answers "where should
+this session resume / this expert be fetched" — the first current
+holder in ring order, which turns the remote NIC + remote-flash
+composition into a plain local read. `prefetch_lead_steps` sizes the
+prefetch lead from the owner flash tier's calibrated open-loop p99 (plus
+the NIC leg for remote fetches) instead of a fixed step count.
 """
 from __future__ import annotations
 
@@ -49,7 +76,8 @@ from ..core.policy import Tier, TieringPolicy
 from .async_engine import AsyncTierRuntime, Transfer
 from .clock import ensure_clock
 from .service import NetQueueModel
-from .tiers import PendingFetch, TierSpec, TieredStore
+from .tiers import (PendingFetch, TierSpec, TieredStore,
+                    lead_steps_from_estimate)
 
 NIC = "NIC"                     # lane key on each host's NIC runtime
 
@@ -75,8 +103,48 @@ class RemoteFetch:
 
     def wait(self) -> np.ndarray:
         value = self.pf.wait()          # owner-store stats + policy move
-        self.fabric.nic[self.owner].wait(self.nic_tr)
+        # the owner may have left the fleet since issue; its NIC lane
+        # lives on in the retired map until the transfer resolves
+        self.fabric._nic_of(self.owner).wait(self.nic_tr)
         return value
+
+
+@dataclasses.dataclass
+class RebalanceStats:
+    """One host join/leave: what the elastic remap actually moved.
+
+    `bytes_resident` counts one copy per resident key at rebalance time
+    (the fleet's unique payload), `bytes_moved` the rebalance streams —
+    on a join of host N+1 their ratio should sit near 1/(N+1), the
+    consistent-hash promise, measured rather than assumed. The stall tax
+    is *not* in here: it lands in the ordinary tier/NIC queue stats of
+    whatever serving traffic ran concurrently, and benchmarks price it
+    as (churn stall - baseline stall) per token."""
+    action: str                 # "join" | "leave"
+    host: int                   # host id that joined / left
+    t_start: float
+    keys_resident: int = 0
+    bytes_resident: int = 0
+    keys_moved: int = 0
+    bytes_moved: int = 0
+    nic_transfers: int = 0
+
+    @property
+    def moved_fraction(self) -> float:
+        return self.bytes_moved / max(self.bytes_resident, 1)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "action": self.action,
+            "host": float(self.host),
+            "t_start": float(self.t_start),
+            "keys_resident": float(self.keys_resident),
+            "bytes_resident": float(self.bytes_resident),
+            "keys_moved": float(self.keys_moved),
+            "bytes_moved": float(self.bytes_moved),
+            "nic_transfers": float(self.nic_transfers),
+            "moved_fraction": float(self.moved_fraction),
+        }
 
 
 class HostView:
@@ -122,46 +190,129 @@ class HostView:
     def delete(self, key):
         self.fabric.delete(key)
 
+    def estimate_fetch_seconds(self, key) -> float:
+        return self.fabric.estimate_fetch_seconds(key,
+                                                  from_host=self.host)
+
+    def prefetch_lead_steps(self, key, step_time: float) -> int:
+        return self.fabric.prefetch_lead_steps(key, step_time,
+                                               from_host=self.host)
+
 
 class ShardedTieredStore:
-    """Consistent-hash-sharded multi-host TieredStore on one clock."""
+    """Consistent-hash-sharded multi-host TieredStore on one clock,
+    elastic under host join/leave."""
 
     def __init__(self, n_hosts: int, *, policy_factory=None,
                  specs: Optional[Dict[Tier, TierSpec]] = None,
                  clock=None, sim_cfg=None,
                  net_model: Optional[NetQueueModel] = None,
                  write_shield_depth: Optional[int] = None,
-                 vnodes: int = 64):
+                 vnodes: int = 64, topology=None):
         if n_hosts < 1:
             raise ValueError("need at least one host")
-        self.n_hosts = n_hosts
         self.clock = ensure_clock(clock)
         if policy_factory is None:
             policy_factory = lambda h: TieringPolicy(  # noqa: E731
                 tau_hot=0.05, tau_be=5.0)
-        self.hosts: List[TieredStore] = [
-            TieredStore(policy_factory(h), specs=specs, clock=self.clock,
-                        sim_cfg=sim_cfg,
-                        write_shield_depth=write_shield_depth)
-            for h in range(n_hosts)]
-        net_model = net_model or NetQueueModel()
-        self.nic: List[AsyncTierRuntime] = [
-            AsyncTierRuntime(clock=self.clock,
-                             service_models={NIC: net_model})
-            for _ in range(n_hosts)]
-        # consistent-hash ring: `vnodes` points per host keep the key
-        # split even and make host count changes remap only ~1/N of keys
-        points: List[Tuple[int, int]] = []
-        for h in range(n_hosts):
-            for v in range(vnodes):
-                points.append((_key_digest(f"host{h}/vn{v}".encode()), h))
-        points.sort()
-        self._ring_points = [p for p, _ in points]
-        self._ring_hosts = [h for _, h in points]
+        # construction recipe, reused verbatim by add_host()
+        self._policy_factory = policy_factory
+        self._specs = specs
+        self._sim_cfg = sim_cfg
+        self._write_shield_depth = write_shield_depth
+        self.vnodes = vnodes
+        if net_model is None:
+            net_model = NetQueueModel(topology=topology)
+        elif topology is not None:
+            # ambiguous: the model's own topology (even None) would
+            # silently win over the explicit argument
+            raise ValueError(
+                "pass the topology on the net_model, not alongside it")
+        self.net_model = net_model
+        self.hosts: Dict[int, TieredStore] = {}
+        self.nic: Dict[int, AsyncTierRuntime] = {}
+        self.host_ids: List[int] = []
+        self._next_host = 0
+        for _ in range(n_hosts):
+            self._new_host()
+        self._rebuild_ring()
+        # in-flight NIC flows (transfer, src, dst) — destination fan-in
+        # for the topology model's incast penalty
+        self._nic_flows: List[Tuple[Transfer, int, int]] = []
+        # requested replication degree per key (pre-clamp, so a join can
+        # restore a degree the old host count could not hold)
+        self._key_replicas: Dict[object, int] = {}
+        # hosts removed but still carrying queue history (and possibly
+        # in-flight egress) for drain/stats and late RemoteFetch waits
+        self.retired: Dict[int, Tuple[TieredStore, AsyncTierRuntime]] = {}
+        self.rebalances: List[RebalanceStats] = []
         # fabric-level counters
         self.local_fetches = 0
         self.remote_fetches = 0
         self.remote_puts = 0
+
+    @property
+    def n_hosts(self) -> int:
+        return len(self.host_ids)
+
+    # ------------------------------------------------------------- topology
+    def _new_host(self) -> int:
+        h = self._next_host
+        self._next_host += 1
+        self.hosts[h] = TieredStore(
+            self._policy_factory(h), specs=self._specs, clock=self.clock,
+            sim_cfg=self._sim_cfg,
+            write_shield_depth=self._write_shield_depth)
+        self.nic[h] = AsyncTierRuntime(
+            clock=self.clock, service_models={NIC: self.net_model})
+        self.host_ids.append(h)
+        return h
+
+    def _rebuild_ring(self):
+        # consistent-hash ring: `vnodes` points per host keep the key
+        # split even and make host count changes remap only ~1/N of keys
+        points: List[Tuple[int, int]] = []
+        for h in self.host_ids:
+            for v in range(self.vnodes):
+                points.append((_key_digest(f"host{h}/vn{v}".encode()), h))
+        points.sort()
+        self._ring_points = [p for p, _ in points]
+        self._ring_hosts = [h for _, h in points]
+
+    def _nic_of(self, host: int) -> AsyncTierRuntime:
+        if host in self.nic:
+            return self.nic[host]
+        return self.retired[host][1]
+
+    def _all_stores(self) -> List[TieredStore]:
+        """Active then retired stores — every surface that aggregates or
+        drains must include retired hosts until their queues resolve."""
+        return list(self.hosts.values()) + [s for s, _ in
+                                            self.retired.values()]
+
+    def _all_nics(self) -> List[AsyncTierRuntime]:
+        return list(self.nic.values()) + [n for _, n in
+                                          self.retired.values()]
+
+    def _nic_submit(self, src: int, dst: int, key, nbytes: int,
+                    kind: str, not_before=None) -> Transfer:
+        """Egress-NIC submit with per-pair topology context: the model is
+        handed src/dst (rack vs spine RTT and bandwidth) and the
+        destination's live sender fan-in (incast). Uniform models get the
+        plain depth-only call."""
+        ctx = None
+        if self.net_model.topology is not None:
+            now = self.clock.now()
+            self._nic_flows = [f for f in self._nic_flows
+                               if not f[0].is_done(now)]
+            senders = {s for t, s, d in self._nic_flows if d == dst}
+            senders.add(src)
+            ctx = {"src": src, "dst": dst, "fan_in": len(senders)}
+        tr = self.nic[src].submit(NIC, key, nbytes, kind=kind,
+                                  not_before=not_before, ctx=ctx)
+        if self.net_model.topology is not None:
+            self._nic_flows.append((tr, src, dst))
+        return tr
 
     # ------------------------------------------------------------- routing
     def _key_point(self, key) -> int:
@@ -171,8 +322,9 @@ class ShardedTieredStore:
         return self.ring_hosts(key)[0]
 
     def ring_hosts(self, key) -> List[int]:
-        """All hosts in ring order starting at the key's point (distinct,
-        length n_hosts) — replica placement and fetch-preference order."""
+        """All active hosts in ring order starting at the key's point
+        (distinct, length n_hosts) — replica placement and
+        fetch-preference order."""
         i = bisect.bisect_right(self._ring_points, self._key_point(key))
         seen: List[int] = []
         n = len(self._ring_hosts)
@@ -189,6 +341,19 @@ class ShardedTieredStore:
         return [h for h in self.ring_hosts(key)
                 if self.hosts[h].tier_of(key) is not None]
 
+    def preferred_host(self, key,
+                       default: Optional[int] = None) -> Optional[int]:
+        """Locality-aware routing: the host a resume/fetch should be
+        scheduled on — the first current holder in ring order (serving
+        there turns the remote NIC + remote-flash composition into a
+        local read), else `default`."""
+        held = self.holders(key)
+        return held[0] if held else default
+
+    def _targets(self, key) -> List[int]:
+        r = self._key_replicas.get(key, 1)
+        return self.ring_hosts(key)[:max(1, min(r, self.n_hosts))]
+
     # ------------------------------------------------------------------ api
     def put(self, key, value, tier: Tier = Tier.DRAM, from_host: int = 0,
             replicas: int = 1):
@@ -196,8 +361,8 @@ class ShardedTieredStore:
         for a host other than `from_host` additionally streams over the
         writer's egress NIC (non-blocking, like tier writes)."""
         value = np.asarray(value)
-        targets = self.ring_hosts(key)[:max(1, min(replicas,
-                                                   self.n_hosts))]
+        self._key_replicas[key] = max(1, int(replicas))
+        targets = self._targets(key)
         # drop stale copies on hosts that are no longer targets
         for h in self.holders(key):
             if h not in targets:
@@ -205,8 +370,8 @@ class ShardedTieredStore:
         for h in targets:
             self.hosts[h].put(key, value, tier=tier)
             if h != from_host:
-                self.nic[from_host].submit(NIC, key, value.nbytes,
-                                           kind="write")
+                self._nic_submit(from_host, h, key, value.nbytes,
+                                 kind="write")
                 self.remote_puts += 1
 
     def get_async(self, key, from_host: int = 0):
@@ -216,14 +381,14 @@ class ShardedTieredStore:
         if self.hosts[from_host].tier_of(key) is not None:
             self.local_fetches += 1
             return self.hosts[from_host].get_async(key)
-        holders = self.holders(key)
-        if not holders:
+        held = self.holders(key)
+        if not held:
             raise KeyError(key)
-        owner = holders[0]
+        owner = held[0]
         pf = self.hosts[owner].get_async(key)
-        nic_tr = self.nic[owner].submit(NIC, key, pf.value.nbytes,
-                                        kind="fetch",
-                                        not_before=pf.transfer.done_t)
+        nic_tr = self._nic_submit(owner, from_host, key, pf.value.nbytes,
+                                  kind="fetch",
+                                  not_before=pf.transfer.done_t)
         # prefetch hit/late classification must see the COMPOSED
         # completion (flash + NIC), not just the flash leg
         pf.external_done_t = nic_tr.done_t
@@ -247,27 +412,153 @@ class ShardedTieredStore:
     def delete(self, key):
         for h in self.holders(key):
             self.hosts[h].delete(key)
+        self._key_replicas.pop(key, None)
 
     def host_view(self, host: int, replicas: int = 1) -> HostView:
         return HostView(self, host, replicas=replicas)
 
+    # ------------------------------------------------------ prefetch sizing
+    def estimate_fetch_seconds(self, key, from_host: int = 0) -> float:
+        """Tail-aware fetch estimate from `from_host`'s vantage point: a
+        local replica is the single-host p99 estimate; a remote fetch
+        adds the owner's egress NIC service (per-pair under topology) on
+        top of the owner's flash estimate."""
+        if self.hosts[from_host].tier_of(key) is not None:
+            return self.hosts[from_host].estimate_fetch_seconds(key)
+        held = self.holders(key)
+        if not held:
+            raise KeyError(key)
+        owner = held[0]
+        est = self.hosts[owner].estimate_fetch_seconds(key)
+        nbytes = self.hosts[owner].nbytes_of(key)
+        depth = self.nic[owner].queue_depth(NIC) + 1
+        if self.net_model.topology is not None:
+            svc = self.net_model.service(nbytes, depth, src=owner,
+                                         dst=from_host, fan_in=1)
+        else:
+            svc = self.net_model.service(nbytes, depth)
+        return est + svc.occupancy + svc.latency
+
+    def prefetch_lead_steps(self, key, step_time: float,
+                            from_host: int = 0) -> int:
+        """p99-sized prefetch lead for restoring `key` on `from_host`:
+        issue the fetch `ceil(estimate / step_time)` decode steps early
+        (>= 1) instead of a fixed lead."""
+        return lead_steps_from_estimate(
+            self.estimate_fetch_seconds(key, from_host=from_host),
+            step_time)
+
+    # ---------------------------------------------------------- elasticity
+    def add_host(self) -> RebalanceStats:
+        """Join a new host: recompute the ring and stream only the
+        remapped ~1/(N+1) of resident keys to it as background rebalance
+        transfers (source flash read -> source egress NIC -> destination
+        placement, the write subject to the destination's write shield).
+        Serving continues; it queues behind the rebalance traffic."""
+        h = self._new_host()
+        self._rebuild_ring()
+        return self._rebalance("join", h)
+
+    def remove_host(self, host: int) -> RebalanceStats:
+        """Drain a leaving host: recompute the ring without it, stream
+        every key it uniquely holds to the new owners (preferring a
+        surviving replica as source), then retire its store and NIC.
+        In-flight egress finishes in the background (`drain` still
+        covers retired queues)."""
+        if host not in self.host_ids:
+            raise KeyError(f"host {host} is not active")
+        if self.n_hosts == 1:
+            raise ValueError("cannot remove the last host")
+        self.host_ids.remove(host)
+        self._rebuild_ring()
+        rb = self._rebalance("leave", host, extra_sources=(host,))
+        self.retired[host] = (self.hosts.pop(host), self.nic.pop(host))
+        return rb
+
+    def _rebalance(self, action: str, host: int,
+                   extra_sources: Tuple[int, ...] = ()) -> RebalanceStats:
+        rb = RebalanceStats(action=action, host=host,
+                            t_start=self.clock.now())
+        scan = list(self.host_ids) + [h for h in extra_sources
+                                      if h not in self.host_ids]
+        resident = {k for h in scan for k in self.hosts[h].keys()}
+        # hash order makes the stream sequence independent of insertion
+        # history (determinism across runs AND across equivalent states)
+        for key in sorted(resident,
+                          key=lambda k: (self._key_point(k), repr(k))):
+            targets = self._targets(key)
+            # ring-preference order, with leaving hosts last so a
+            # surviving replica is preferred as the stream source
+            held = [h for h in self.ring_hosts(key) + list(extra_sources)
+                    if h in self.hosts
+                    and self.hosts[h].tier_of(key) is not None]
+            src = held[0]
+            nbytes = self.hosts[src].nbytes_of(key)
+            src_tier = self.hosts[src].tier_of(key)
+            rb.keys_resident += 1
+            rb.bytes_resident += nbytes
+            moved = False
+            for dst in targets:
+                if dst in held:
+                    continue
+                value, tr = self.hosts[src].read_for_transfer(key)
+                nic_tr = self._nic_submit(src, dst, key, nbytes,
+                                          kind="rebalance",
+                                          not_before=tr.done_t)
+                self.hosts[dst].ingest(key, value, tier=src_tier,
+                                       not_before=nic_tr.done_t)
+                rb.bytes_moved += nbytes
+                rb.nic_transfers += 1
+                moved = True
+            if moved:
+                rb.keys_moved += 1
+            for h in held:
+                if h not in targets:
+                    self.hosts[h].delete(key)
+        self.rebalances.append(rb)
+        return rb
+
     # ------------------------------------------------------------- control
     def drain(self) -> float:
         """Advance to the completion of every in-flight transfer on every
-        host (tier queues and NICs), flushing shielded writes. Draining
-        the tier queues completes the read bursts that shield deferred
-        demotion writes, so flushing happens *after* each drain pass and
-        the loop repeats until no transfer and no parked write remains."""
+        host (tier queues and NICs, retired ones included), flushing
+        shielded writes. Draining the tier queues completes the read
+        bursts that shield deferred demotion writes, so flushing happens
+        *after* each drain pass and the loop repeats until no transfer
+        and no parked write remains."""
         t = self.clock.now()
         while True:
-            for store in self.hosts:
+            stores, nics = self._all_stores(), self._all_nics()
+            for store in stores:
                 t = max(t, store.runtime.drain())
-            for nic in self.nic:
+            for nic in nics:
                 t = max(t, nic.drain())
             if not any(store.flush_deferred_writes()
                        or store.deferred_writes_pending
-                       for store in self.hosts):
+                       for store in stores):
                 return t
+
+    def reset_stats(self):
+        """Zero every per-host `TierStats`/`QueueStats`, every NIC lane's
+        stats, and the fabric counters — not residency, parked writes,
+        in-flight transfers, or recorded rebalances. Benchmarks call
+        this between setup and the measured phase."""
+        for store in self._all_stores():
+            store.reset_stats()
+        for nic in self._all_nics():
+            nic.reset_stats()
+        self.local_fetches = 0
+        self.remote_fetches = 0
+        self.remote_puts = 0
+
+    def resident_bytes(self) -> int:
+        """One copy per resident key (the fleet's unique payload)."""
+        total = 0
+        for key in {k for s in self.hosts.values() for k in s.keys()}:
+            held = self.holders(key)
+            if held:
+                total += self.hosts[held[0]].nbytes_of(key)
+        return total
 
     # --------------------------------------------------------------- stats
     def summary(self) -> Dict[str, float]:
@@ -279,25 +570,32 @@ class ShardedTieredStore:
             "remote_puts": float(self.remote_puts),
         }
         agg = {"prefetch_hits": 0, "prefetch_late": 0, "demotions": 0,
-               "demotions_deferred": 0, "deferred_bytes": 0}
+               "demotions_deferred": 0, "rebalance_deferred": 0,
+               "deferred_bytes": 0}
         flash_stall = 0.0
-        for store in self.hosts:
+        stores, nics = self._all_stores(), self._all_nics()
+        for store in stores:
             for st in store.stats.values():
                 for k in agg:
                     agg[k] += getattr(st, k)
             flash_stall += store.stats[Tier.FLASH].stall_time
-        nic_stall = sum(n.qstats[NIC].stall_time for n in self.nic)
-        nic_bytes = sum(n.qstats[NIC].bytes_moved for n in self.nic)
+        nic_stall = sum(n.qstats[NIC].stall_time for n in nics)
+        nic_bytes = sum(n.qstats[NIC].bytes_moved for n in nics)
         out.update({k: float(v) for k, v in agg.items()})
         out["flash_stall"] = flash_stall
         out["nic_stall"] = nic_stall
         out["nic_bytes"] = float(nic_bytes)
+        out["rebalances"] = float(len(self.rebalances))
+        out["rebalance_keys_moved"] = float(
+            sum(rb.keys_moved for rb in self.rebalances))
+        out["rebalance_bytes_moved"] = float(
+            sum(rb.bytes_moved for rb in self.rebalances))
         return out
 
     def report(self) -> str:
         lines = []
-        for h, store in enumerate(self.hosts):
-            nst = self.nic[h].qstats[NIC]
+        for h in self.host_ids:
+            store, nst = self.hosts[h], self.nic[h].qstats[NIC]
             lines.append(f"host {h}:")
             lines.append(store.report())
             lines.append(
@@ -309,5 +607,7 @@ class ShardedTieredStore:
         lines.append(
             f"fabric local={int(s['local_fetches'])} "
             f"remote={int(s['remote_fetches'])} "
-            f"deferred_demotions={int(s['demotions_deferred'])}")
+            f"deferred_demotions={int(s['demotions_deferred'])} "
+            f"rebalanced={s['rebalance_bytes_moved']/2**20:.1f}MiB "
+            f"in {int(s['rebalances'])} events")
         return "\n".join(lines)

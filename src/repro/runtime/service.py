@@ -71,6 +71,51 @@ class FixedLatencyModel:
                        latency=self.read_latency)
 
 
+@dataclasses.dataclass(frozen=True)
+class FabricTopology:
+    """Rack/spine topology descriptor for the fabric's transfer tier.
+
+    Hosts are packed `hosts_per_rack` to a rack; a pair in the same rack
+    talks through the ToR switch (short RTT, full NIC bandwidth), a pair
+    in different racks crosses the spine (longer RTT, and an
+    oversubscribed share of the uplink). `incast_degree` is the fan-in a
+    destination host absorbs at line rate; beyond it the senders split
+    the receiver's ingress (the classic incast collapse, modeled as a
+    linear bandwidth division so degradation is monotone in fan-in).
+    """
+    hosts_per_rack: int = 4
+    rack_rtt: float = 15e-6
+    spine_rtt: float = 40e-6
+    rack_bandwidth: float = 12.5e9      # 100 Gb/s within the rack
+    spine_bandwidth: float = 6.25e9     # 2:1 oversubscribed uplink share
+    incast_degree: int = 2
+
+    def __post_init__(self):
+        if (self.hosts_per_rack < 1 or self.incast_degree < 1
+                or self.rack_rtt < 0 or self.spine_rtt < self.rack_rtt
+                or self.rack_bandwidth <= 0
+                or self.spine_bandwidth <= 0):
+            raise ValueError("invalid topology parameters")
+
+    def rack_of(self, host: int) -> int:
+        return int(host) // self.hosts_per_rack
+
+    def same_rack(self, src: int, dst: int) -> bool:
+        return self.rack_of(src) == self.rack_of(dst)
+
+    def rtt(self, src: int, dst: int) -> float:
+        return self.rack_rtt if self.same_rack(src, dst) else self.spine_rtt
+
+    def bandwidth(self, src: int, dst: int) -> float:
+        return (self.rack_bandwidth if self.same_rack(src, dst)
+                else self.spine_bandwidth)
+
+    def incast_factor(self, fan_in: int) -> float:
+        """Ingress bandwidth divisor at `fan_in` concurrent senders:
+        1.0 up to `incast_degree`, then linear — monotone in fan-in."""
+        return max(1.0, float(fan_in) / self.incast_degree)
+
+
 class NetQueueModel:
     """Cross-host NIC link service for the sharded fabric's transfer tier.
 
@@ -87,20 +132,37 @@ class NetQueueModel:
     rising with queue depth). Occupancies serialize on the link in the
     runtime's queueing; RTT latencies pipeline. Defaults model a
     100 Gb/s fleet NIC at ~25us intra-cluster RTT.
+
+    Topology mode: construct with `topology=FabricTopology(...)` and
+    `service` becomes per-pair — the fabric passes `src`/`dst` host ids
+    and the destination's current sender fan-in, so an intra-rack hop
+    gets the short RTT at full bandwidth, a spine hop the longer RTT at
+    the oversubscribed share, and high fan-in into one destination
+    divides its ingress bandwidth (incast). Without a topology the
+    uniform single-link behavior is unchanged (extra context ignored).
     """
 
     def __init__(self, rtt: float = 25e-6, bandwidth: float = 12.5e9,
-                 sat_depth: int = 4):
+                 sat_depth: int = 4,
+                 topology: Optional[FabricTopology] = None):
         if rtt < 0 or bandwidth <= 0 or sat_depth < 1:
             raise ValueError("invalid NIC parameters")
         self.rtt = rtt
         self.bandwidth = bandwidth
         self.sat_depth = sat_depth
+        self.topology = topology
 
-    def service(self, nbytes: int, queue_depth: int) -> Service:
+    def service(self, nbytes: int, queue_depth: int,
+                src: Optional[int] = None, dst: Optional[int] = None,
+                fan_in: int = 1) -> Service:
+        rtt, bw = self.rtt, self.bandwidth
+        topo = self.topology
+        if topo is not None and src is not None and dst is not None:
+            rtt, bw = topo.rtt(src, dst), topo.bandwidth(src, dst)
+            bw /= topo.incast_factor(max(1, int(fan_in)))
         d = max(1, min(int(queue_depth), self.sat_depth))
-        eff_bw = self.bandwidth * (d / self.sat_depth)
-        return Service(occupancy=nbytes / eff_bw, latency=self.rtt)
+        eff_bw = bw * (d / self.sat_depth)
+        return Service(occupancy=nbytes / eff_bw, latency=rtt)
 
 
 class SsdQueueModel:
@@ -226,6 +288,16 @@ class SsdQueueModel:
             self._calibrate_p99()
         return {d: (float(i), float(l), float(p)) for d, i, l, p in
                 zip(self.DEPTHS, self._iops, self._lat, self._p99)}
+
+    def p99(self, queue_depth: int) -> float:
+        """Interpolated open-loop p99 read latency at `queue_depth` — the
+        tail the p99-sized prefetch lead must cover (`service().latency`
+        is the closed-loop mean, which under-sizes the lead exactly when
+        queueing matters)."""
+        if self._p99 is None:
+            self._calibrate_p99()
+        d = float(np.clip(queue_depth, self.DEPTHS[0], self.DEPTHS[-1]))
+        return float(np.interp(math.log2(d), self._xs, self._p99))
 
     def service(self, nbytes: int, queue_depth: int) -> Service:
         if self._iops is None:

@@ -39,6 +39,7 @@ than every tier raises ValueError.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -46,6 +47,15 @@ import numpy as np
 from ..core.policy import Tier, TieringPolicy
 from .async_engine import AsyncTierRuntime, Transfer
 from .clock import ensure_clock
+
+
+def lead_steps_from_estimate(est: float, step_time: float) -> int:
+    """Decode steps a prefetch must lead by to cover a fetch estimate
+    (`ceil(est / step_time)`, >= 1; 1 when step time is unknown). The
+    single definition both the store and fabric lead sizing use."""
+    if step_time <= 0:
+        return 1
+    return max(1, math.ceil(est / step_time))
 
 
 @dataclasses.dataclass
@@ -68,7 +78,8 @@ class TierStats:
     prefetch_hits: int = 0      # async fetch finished before wait
     prefetch_late: int = 0      # wait still had to block
     demotions_deferred: int = 0  # demotion writes parked by write shielding
-    deferred_bytes: int = 0      # bytes those parked writes will move
+    rebalance_deferred: int = 0  # rebalance ingest writes parked likewise
+    deferred_bytes: int = 0      # bytes all parked writes will move
 
     @property
     def hit_rate(self) -> float:
@@ -132,7 +143,10 @@ class TieredStore:
             raise ValueError("write_shield_depth must be >= 1 (a zero "
                              "threshold would shield forever)")
         self.write_shield_depth = write_shield_depth
-        self._deferred_writes: List[Tuple[Tier, object, int]] = []
+        # parked (tier, key, nbytes, not_before) — the gate keeps a
+        # shielded rebalance write behind its upstream NIC delivery
+        self._deferred_writes: List[
+            Tuple[Tier, object, int, Optional[float]]] = []
 
     # ----------------------------------------------------------------- util
     def tier_of(self, key) -> Optional[Tier]:
@@ -143,6 +157,29 @@ class TieredStore:
 
     def used_bytes(self, tier: Tier) -> int:
         return self._used[tier]
+
+    def keys(self) -> List[object]:
+        """All resident keys across tiers (hot-to-cold tier order)."""
+        out: List[object] = []
+        for t in Tier:
+            out.extend(self._data[t])
+        return out
+
+    def nbytes_of(self, key) -> int:
+        cur = self.tier_of(key)
+        if cur is None:
+            raise KeyError(key)
+        return self._data[cur][key].nbytes
+
+    def reset_stats(self):
+        """Zero all per-tier `TierStats` and the runtime's `QueueStats`
+        without touching structural state (residency, capacity, parked
+        deferred writes, in-flight transfers). Benchmarks call this after
+        their setup/warm-up phase so repetitions on a reused store don't
+        inherit stale counters — the deferral counters in particular
+        accumulate across reps otherwise."""
+        self.stats = {t: TierStats() for t in Tier}
+        self.runtime.reset_stats()
 
     # ------------------------------------------------------------------ api
     def put(self, key, value: np.ndarray, tier: Tier = Tier.DRAM):
@@ -207,6 +244,52 @@ class TieredStore:
         calls `.wait()` when the value is actually needed."""
         return self._issue_fetch(key)
 
+    def read_for_transfer(self, key):
+        """Raw outbound read for fabric rebalance streaming: occupies the
+        resident tier's queue and counts bytes, but is neither a cache
+        hit nor a policy observation (rebalance traffic must not promote
+        keys or skew hit rates). Returns (value, transfer)."""
+        cur = self.tier_of(key)
+        if cur is None:
+            raise KeyError(key)
+        value = self._data[cur][key]
+        tr = self.runtime.submit(cur, key, value.nbytes, kind="rebalance")
+        self.stats[cur].bytes_read += value.nbytes
+        return value, tr
+
+    def ingest(self, key, value: np.ndarray, tier: Tier = Tier.FLASH,
+               not_before: Optional[float] = None):
+        """Inbound rebalance placement: the object lands structurally at
+        once, but the destination write is subject to write shielding
+        exactly like a demotion — while this tier has a read burst in
+        flight (depth >= `write_shield_depth`) the queue charge parks in
+        the deferred list instead of inflating the burst's tail.
+        `not_before` gates an unshielded write on the upstream NIC
+        delivery. No policy observation: arrival by rebalance is not a
+        reuse event."""
+        value = np.asarray(value)
+        cur = self.tier_of(key)
+        if cur is not None:
+            self._remove(key, cur)
+        tier = self._fit_tier(tier, value.nbytes)
+        self._ensure_room(tier, value.nbytes)
+        self._data[tier][key] = value
+        self._used[tier] += value.nbytes
+        st = self.stats[tier]
+        st.bytes_written += value.nbytes
+        if self._shielded(tier):
+            # parked like a deferred demotion write (same flush path)
+            # but counted separately so the Flashield stat stays pure;
+            # the NIC gate parks with it so a flush after the burst
+            # drains still cannot write bytes that have not arrived
+            st.rebalance_deferred += 1
+            st.deferred_bytes += value.nbytes
+            self._deferred_writes.append((tier, key, value.nbytes,
+                                          not_before))
+        else:
+            self.runtime.submit(tier, key, value.nbytes, kind="write",
+                                not_before=not_before)
+
     def delete(self, key):
         cur = self.tier_of(key)
         if cur is not None:
@@ -257,7 +340,7 @@ class TieredStore:
             st = self.stats[dst]
             st.demotions_deferred += 1
             st.deferred_bytes += v.nbytes
-            self._deferred_writes.append((dst, key, v.nbytes))
+            self._deferred_writes.append((dst, key, v.nbytes, None))
         else:
             self.runtime.submit(dst, key, v.nbytes, kind="write")
         if demote:
@@ -276,12 +359,13 @@ class TieredStore:
         shielded tier stay parked (per-tier FIFO order preserved) without
         blocking writes bound for other, unshielded tiers."""
         flushed = 0
-        keep: List[Tuple[Tier, object, int]] = []
-        for dst, key, nbytes in self._deferred_writes:
+        keep: List[Tuple[Tier, object, int, Optional[float]]] = []
+        for dst, key, nbytes, not_before in self._deferred_writes:
             if self._shielded(dst):
-                keep.append((dst, key, nbytes))
+                keep.append((dst, key, nbytes, not_before))
             else:
-                self.runtime.submit(dst, key, nbytes, kind="write")
+                self.runtime.submit(dst, key, nbytes, kind="write",
+                                    not_before=not_before)
                 flushed += 1
         self._deferred_writes = keep
         return flushed
@@ -318,6 +402,31 @@ class TieredStore:
                     f"cannot make room in {tier.name}: empty tier yet "
                     f"{nbytes} bytes exceed capacity {spec.capacity_bytes}")
             self._move(victims[0], tier, Tier(tier + 1))
+
+    # ------------------------------------------------------- prefetch sizing
+    def estimate_fetch_seconds(self, key) -> float:
+        """Tail-aware estimate of a fetch of `key` issued now: occupancy
+        at the tier's current depth plus the open-loop p99 access latency
+        when the tier's service model calibrates one (flash), else the
+        model's mean. This is what p99-sized prefetch leads are cut from
+        — the mean under-sizes the lead exactly when the queue is deep."""
+        cur = self.tier_of(key)
+        if cur is None:
+            raise KeyError(key)
+        nbytes = self._data[cur][key].nbytes
+        depth = self.runtime.queue_depth(cur) + 1
+        model = self.runtime.models[cur]
+        svc = model.service(nbytes, depth)
+        p99 = getattr(model, "p99", None)
+        lat = max(svc.latency, p99(depth)) if callable(p99) else svc.latency
+        return svc.occupancy + lat
+
+    def prefetch_lead_steps(self, key, step_time: float) -> int:
+        """p99-sized prefetch lead: issue the restore
+        `ceil(p99_fetch_estimate / step_time)` decode steps early (>= 1)
+        instead of a fixed lead."""
+        return lead_steps_from_estimate(self.estimate_fetch_seconds(key),
+                                        step_time)
 
     # ---------------------------------------------------------------- report
     def report(self) -> str:

@@ -6,7 +6,9 @@ fetched KV *synchronously* at resume — every turn began with the full
 flash fetch stalling decode. The async runtime overlaps: the next
 session's KV restore is issued `lead` decode steps early and streams
 behind the current session's compute, so resume blocks only on the
-unfinished remainder.
+unfinished remainder. `lead="p99"` sizes that lead per turn from the
+calibrated open-loop p99 of the tier that will serve the fetch
+(`ceil(p99_estimate / step_time)` steps early) instead of a fixed count.
 
 Everything runs on a `VirtualClock` with queueing-aware flash service
 times from the calibrated ssdsim model, so the output is a deterministic
@@ -17,14 +19,18 @@ speed. Run `benchmarks/serving_async.py` for the CLI report.
 fabric: sessions pause on one host and resume on another (chosen by a
 seeded schedule, optionally Zipf-skewed toward hot sessions), so most
 restores cross the NIC transfer tier composed with the owner host's
-flash queue. Async mode prefetches the next turn's KV from the host
-that will serve it, `lead` decode steps before the current turn ends —
-the cross-host stream rides behind decode exactly like the single-host
-case. Run `benchmarks/serving_fleet.py` for the host-count x skew sweep.
+flash queue. `locality=True` reroutes each resume to a host already
+holding the session's KV replica (remote restores become local reads);
+`churn={"join_turn": t}` (and/or `"leave_turn"`) makes the fleet
+elastic mid-schedule — the fabric streams the remapped ~1/N of keys as
+background rebalance traffic and the benchmark prices the rebalance tax
+as added stall per token (see `compare_churn`). Run
+`benchmarks/serving_fleet.py` for the host-count x skew sweep and the
+`--churn` elasticity report.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -34,20 +40,31 @@ from ..runtime.fabric import ShardedTieredStore
 from ..runtime.tiers import TieredStore
 
 
+def _lead_steps(lead, store, key, step_time: float, decode_steps: int,
+                **kw) -> int:
+    """Fixed lead -> as given; "p99" -> sized from the serving tier's
+    calibrated tail so the estimate is covered (capped at a full turn)."""
+    if lead == "p99":
+        return min(decode_steps,
+                   store.prefetch_lead_steps(key, step_time, **kw))
+    return int(lead)
+
+
 def multi_turn_session_bench(mode: str = "async", *,
                              n_sessions: int = 16,
                              rounds: int = 3,
                              kv_bytes: int = 2 << 20,
                              decode_steps: int = 32,
                              step_time: float = 2e-3,
-                             lead: int = 8,
+                             lead=8,
                              sim_cfg=None) -> Dict[str, float]:
     """Round-robin multi-turn serving on the virtual clock.
 
     Each round resumes every session once: restore KV (sync fetch, or a
-    prefetch issued `lead` steps before the previous session finishes),
-    decode `decode_steps` tokens at `step_time`, pause (KV back to
-    flash). Returns modeled totals incl. per-token stall.
+    prefetch issued `lead` steps before the previous session finishes —
+    `lead="p99"` sizes it from the flash tier's calibrated tail), decode
+    `decode_steps` tokens at `step_time`, pause (KV back to flash).
+    Returns modeled totals incl. per-token stall.
     """
     assert mode in ("sync", "async"), mode
     # thresholds pinned so session KV stays on the flash tier: the
@@ -59,11 +76,12 @@ def multi_turn_session_bench(mode: str = "async", *,
     keys = [("kv", f"s{i}") for i in range(n_sessions)]
     for k in keys:
         store.put(k, blob, tier=Tier.FLASH)
+    store.runtime.drain()
+    store.reset_stats()         # measured phase only, not setup writes
 
     total_stall = 0.0
     tokens = 0
     pending = {}
-    prefetch_at = max(0, decode_steps - lead)
     for _ in range(rounds):
         for i, key in enumerate(keys):
             # --- restore ------------------------------------------------
@@ -75,10 +93,13 @@ def multi_turn_session_bench(mode: str = "async", *,
             total_stall += clock.now() - t0
             # --- decode, issuing the next session's prefetch mid-turn ---
             nxt = keys[(i + 1) % n_sessions]
+            prefetch_at = decode_steps
+            if (mode == "async" and nxt not in pending and nxt != key
+                    and store.tier_of(nxt) is not None):
+                prefetch_at = max(0, decode_steps - _lead_steps(
+                    lead, store, nxt, step_time, decode_steps))
             for s in range(decode_steps):
-                if (mode == "async" and s == prefetch_at
-                        and nxt not in pending and nxt != key
-                        and store.tier_of(nxt) is not None):
+                if s == prefetch_at:
                     pending[nxt] = store.get_async(nxt)
                 clock.advance(step_time)
             tokens += decode_steps
@@ -118,11 +139,15 @@ def multi_host_session_bench(mode: str = "async", *,
                              kv_bytes: int = 1 << 20,
                              decode_steps: int = 16,
                              step_time: float = 2e-3,
-                             lead: int = 8,
+                             lead=8,
                              skew: float = 0.0,
                              seed: int = 0,
                              sim_cfg=None, net_model=None,
-                             write_shield_depth=None) -> Dict[str, float]:
+                             write_shield_depth=None,
+                             topology=None,
+                             locality: bool = False,
+                             churn: Optional[Dict[str, int]] = None
+                             ) -> Dict[str, float]:
     """Fleet serving on the sharded fabric's shared virtual clock.
 
     Each turn resumes one session on one host: restore its KV through
@@ -132,19 +157,29 @@ def multi_host_session_bench(mode: str = "async", *,
     schedule is drawn up front from a seeded RNG — identical for both
     modes — with session popularity Zipf-skewed by `skew` (0 = uniform).
     Async mode issues the next turn's restore from the next serving
-    host's vantage point, `lead` steps before the current turn ends.
+    host's vantage point, `lead` steps before the current turn ends
+    (`lead="p99"` sizes it per turn from the owner flash tail + NIC leg).
+
+    `locality=True` reroutes each turn to the first host already holding
+    the session's KV (the scheduled host is only a fallback), turning
+    remote restores into local reads. `churn={"join_turn": t}` joins a
+    host before turn t (`"leave_turn"`/`"leave_host"` removes one);
+    rebalance streams share the queues with serving traffic, and the
+    rebalance tallies land in the returned record.
     """
     assert mode in ("sync", "async"), mode
     clock = VirtualClock()
     fabric = ShardedTieredStore(
         n_hosts, policy_factory=_pinned_flash_policy, clock=clock,
         sim_cfg=sim_cfg, net_model=net_model,
-        write_shield_depth=write_shield_depth)
+        write_shield_depth=write_shield_depth, topology=topology)
     blob = np.zeros(max(kv_bytes // 4, 1), np.float32)
     keys = [("kv", f"s{i}") for i in range(n_sessions)]
     for i, k in enumerate(keys):
         fabric.put(k, blob, tier=Tier.FLASH, from_host=i % n_hosts)
     fabric.drain()                      # start from quiesced queues
+    fabric.reset_stats()                # measured phase only, not setup
+    resident_before = fabric.resident_bytes()
 
     rng = np.random.default_rng(seed)
     n_turns = rounds * n_sessions
@@ -154,27 +189,67 @@ def multi_host_session_bench(mode: str = "async", *,
         rng.choice(n_sessions, size=n_turns, p=w),
         rng.integers(0, n_hosts, size=n_turns))]
 
+    events: Dict[int, list] = {}
+    if churn:
+        # join before leave at the same turn: the fleet grows, then the
+        # newest host departs — both rebalances are measured
+        if "join_turn" in churn:
+            events.setdefault(int(churn["join_turn"]),
+                              []).append(("join", None))
+        if "leave_turn" in churn:
+            events.setdefault(int(churn["leave_turn"]),
+                              []).append(("leave", churn.get("leave_host")))
+
+    def route(si: int, host: int) -> int:
+        """Serving host for a turn: locality reroute when enabled, and a
+        fallback when the scheduled host has left the fleet."""
+        if locality:
+            return fabric.preferred_host(keys[si], default=host)
+        if host not in fabric.hosts:
+            return fabric.preferred_host(keys[si],
+                                         default=fabric.host_ids[0])
+        return host
+
     total_stall = 0.0
     tokens = 0
-    pending: Dict[int, object] = {}     # turn index -> fetch handle
-    prefetch_at = max(0, decode_steps - lead)
+    locality_hits = 0
+    pending: Dict[int, tuple] = {}      # turn index -> (handle, host)
     for t, (si, host) in enumerate(sched):
+        for action, victim in events.pop(t, ()):
+            if action == "join":
+                fabric.add_host()
+            elif fabric.n_hosts > 1:
+                victim = max(fabric.host_ids) if victim is None else victim
+                fabric.remove_host(victim)
+                pending = {k: v for k, v in pending.items()
+                           if v[1] in fabric.hosts}
         key = keys[si]
         # --- restore -----------------------------------------------------
         t0 = clock.now()
-        pf = pending.pop(t, None)
+        entry = pending.pop(t, None)
+        pf, host = entry if entry is not None else (None, route(si, host))
+        if fabric.hosts[host].tier_of(key) is not None:
+            locality_hits += 1
         if pf is None:
             pf = fabric.get_async(key, from_host=host)
         pf.wait()
         total_stall += clock.now() - t0
         # --- decode, issuing the next turn's prefetch mid-turn -----------
+        prefetch_at = decode_steps
+        nxt = None
+        if mode == "async" and t + 1 < n_turns and t + 1 not in pending:
+            nsi, nhost = sched[t + 1]
+            nhost = route(nsi, nhost)
+            if fabric.tier_of(keys[nsi]) is not None:
+                nxt = (nsi, nhost)
+                prefetch_at = max(0, decode_steps - _lead_steps(
+                    lead, fabric, keys[nsi], step_time, decode_steps,
+                    from_host=nhost))
         for s in range(decode_steps):
-            if (mode == "async" and s == prefetch_at
-                    and t + 1 < n_turns and t + 1 not in pending):
-                nsi, nhost = sched[t + 1]
-                if fabric.tier_of(keys[nsi]) is not None:
-                    pending[t + 1] = fabric.get_async(
-                        keys[nsi], from_host=nhost)
+            if s == prefetch_at and nxt is not None:
+                nsi, nhost = nxt
+                pending[t + 1] = (fabric.get_async(
+                    keys[nsi], from_host=nhost), nhost)
             clock.advance(step_time)
         tokens += decode_steps
         # --- pause (KV streams back to the owner shard) -------------------
@@ -184,16 +259,24 @@ def multi_host_session_bench(mode: str = "async", *,
     out = {
         "mode": mode,
         "hosts": float(n_hosts),
+        "final_hosts": float(fabric.n_hosts),
         "skew": float(skew),
+        "locality": float(locality),
+        "locality_hits": float(locality_hits),
         "tokens": float(tokens),
         "total_stall": total_stall,
         "per_token_stall": total_stall / max(tokens, 1),
         "makespan": clock.now(),
+        "resident_bytes": float(resident_before),
     }
     for k in ("local_fetches", "remote_fetches", "remote_puts",
               "prefetch_hits", "prefetch_late", "demotions_deferred",
-              "nic_stall", "nic_bytes"):
+              "nic_stall", "nic_bytes", "rebalances",
+              "rebalance_keys_moved", "rebalance_bytes_moved"):
         out[k] = s[k]
+    if fabric.rebalances:
+        out["rebalance_events"] = [rb.as_dict()
+                                   for rb in fabric.rebalances]
     return out
 
 
@@ -205,3 +288,27 @@ def compare_fleet(**kw) -> Dict[str, object]:
     speedup = sync["per_token_stall"] / max(async_["per_token_stall"],
                                             1e-12)
     return {"sync": sync, "async": async_, "stall_speedup": speedup}
+
+
+def compare_churn(churn: Dict[str, int], *, baseline=None,
+                  **kw) -> Dict[str, object]:
+    """The rebalance tax, measured: the identical async schedule with and
+    without the churn events, plus the added per-token stall and the
+    moved-fraction of resident bytes (on a 4->5 join this should sit
+    near 1/5 — the consistent-hash promise). Pass `baseline=` when the
+    no-churn async record for these kwargs already exists (runs are
+    byte-identical, so re-simulating it would only burn time)."""
+    if baseline is None:
+        baseline = multi_host_session_bench("async", **kw)
+    churned = multi_host_session_bench("async", churn=churn, **kw)
+    added = (churned["per_token_stall"] - baseline["per_token_stall"])
+    return {
+        "baseline": baseline,
+        "churn": churned,
+        "added_stall_per_token": added,
+        "stall_ratio": (churned["per_token_stall"]
+                        / max(baseline["per_token_stall"], 1e-12)),
+        "rebalance_bytes": churned["rebalance_bytes_moved"],
+        "rebalance_fraction": (churned["rebalance_bytes_moved"]
+                               / max(churned["resident_bytes"], 1)),
+    }

@@ -187,6 +187,28 @@ class DecodeEngine:
             raise KeyError(f"session {rid!r} already paused here")
         self._paused[rid] = state
 
+    def locality_host(self, rid: str) -> int:
+        """Host a resuming session should be routed to: one already
+        holding its KV replica (the remote NIC + remote-flash restore
+        becomes a plain local read), else this engine's host. Only
+        meaningful in fabric mode — a single-host store is its own
+        locality."""
+        fab = getattr(self.store, "fabric", None)
+        if fab is None:
+            return self.host
+        return fab.preferred_host(("kv", rid), default=self.host)
+
+    def prefetch_lead(self, rid: str) -> int:
+        """p99-sized prefetch lead for `rid` in decode steps: how many
+        steps before the slot is needed `prefetch` should be called so
+        the tail-aware fetch estimate (owner flash p99 + NIC leg when
+        remote) is covered by modeled decode compute. Falls back to one
+        step when the store predates lead sizing or `step_time` is 0."""
+        lead_fn = getattr(self.store, "prefetch_lead_steps", None)
+        if lead_fn is None or self.step_time <= 0:
+            return 1
+        return lead_fn(("kv", rid), self.step_time)
+
     def prefetch(self, rid: str):
         """Issue a paused session's KV restore asynchronously: the fetch
         streams from its tier while decode steps keep advancing the clock.
@@ -279,3 +301,22 @@ class DecodeEngine:
             steps += 1
             done += [r for r in requests if r.done and r not in done]
         return done
+
+
+def route_session(engines: Dict[int, "DecodeEngine"], rid: str,
+                  state=None) -> "DecodeEngine":
+    """Locality-aware session routing across a fleet of engines (one per
+    fabric host): pick the engine whose host already holds the session's
+    KV replica, so the restore is a local flash read instead of the NIC
+    + remote-flash composition. Falls back to the first engine when no
+    replica exists (fresh session) or the holder runs no engine. When
+    `state` (from `export_session`) is given, the session is imported
+    into the chosen engine."""
+    if not engines:
+        raise ValueError("no engines to route over")
+    first = next(iter(engines.values()))
+    host = first.locality_host(rid)
+    target = engines.get(host, first)
+    if state is not None:
+        target.import_session(rid, state)
+    return target

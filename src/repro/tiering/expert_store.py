@@ -112,6 +112,27 @@ class ExpertStore:
                 self.store.move((layer, e), want)
         return plan
 
+    # ------------------------------------------------------------ routing
+    def locality_host(self, layer: int, expert: int) -> int:
+        """Host a selection of this expert should be routed to: one
+        already holding a replica (the stream becomes a local flash
+        read), else this store's host. Single-host stores are their own
+        locality."""
+        fab = getattr(self.store, "fabric", None)
+        if fab is None:
+            return self.host
+        return fab.preferred_host((layer, int(expert)), default=self.host)
+
+    def prefetch_lead_steps(self, layer: int, expert: int,
+                            step_time: float) -> int:
+        """p99-sized prefetch lead for this expert in decode steps (how
+        early `prefetch_experts` should run so the tail-aware fetch
+        estimate is covered); 1 when the store predates lead sizing."""
+        lead_fn = getattr(self.store, "prefetch_lead_steps", None)
+        if lead_fn is None or step_time <= 0:
+            return 1
+        return lead_fn((layer, int(expert)), step_time)
+
     # ------------------------------------------------------------ streaming
     def prefetch_experts(self, layer: int, expert_ids) -> int:
         """Issue async fetches for `expert_ids` of `layer`; returns how

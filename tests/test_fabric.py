@@ -231,12 +231,12 @@ def test_flush_deferred_not_head_of_line_blocked():
     # ...then HBM pressure defers DRAM-bound ones behind them
     for i in range(3):
         store.put(("h", i), np.ones(1 << 19, np.uint8), tier=Tier.HBM)
-    dsts = {d for d, _, _ in store._deferred_writes}
+    dsts = {d for d, *_ in store._deferred_writes}
     assert dsts == {Tier.FLASH, Tier.DRAM}
     # the DRAM read finishes long before the flash one: its wait flushes
     # the DRAM-bound writes even though FLASH entries head the list
     pf_dram.wait()
-    dsts = {d for d, _, _ in store._deferred_writes}
+    dsts = {d for d, *_ in store._deferred_writes}
     assert Tier.DRAM not in dsts and Tier.FLASH in dsts
     pf_flash.wait()
     assert store.deferred_writes_pending == 0
@@ -251,7 +251,7 @@ def test_deleted_key_cancels_parked_deferred_write():
     store.put(("hot", 1), np.ones(1 << 20, np.uint8), tier=Tier.DRAM)
     store.put(("hot", 2), np.ones(1 << 20, np.uint8), tier=Tier.DRAM)
     assert store.deferred_writes_pending > 0
-    parked_keys = [k for _, k, _ in store._deferred_writes]
+    parked_keys = [k for _, k, *_ in store._deferred_writes]
     for k in parked_keys:
         store.delete(k)
     assert store.deferred_writes_pending == 0
