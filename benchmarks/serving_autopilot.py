@@ -1,0 +1,99 @@
+"""Autopilot serving benchmark: break-even admission vs static placement.
+
+Replays four scenario traces (Zipf, scan-flood, diurnal hotspot shift,
+bursty multi-tenant) against a capacity-bound TieredStore under three
+policies — the EconomicGate (tracked reuse vs calibrated break-even),
+always-DRAM (LRU-ish capacity pressure, the seed behavior), and
+always-flash — and reports modeled $/token (DRAM rent + DRAM wire +
+flash IO + host CPU + stalled-accelerator time, in the paper's
+normalized units) plus per-token stall. The acceptance criterion per
+scenario: the gate's $/token must not exceed the best static baseline's
+at equal-or-lower per-token stall.
+
+The economic run also emits the live ProvisionAdvisor output (measured
+hot set, DRAM:flash split, host count, limiting resource) — the same
+telemetry the gate steers by, turned into provisioning guidance.
+
+Everything runs on a VirtualClock with seeded traces, so the JSON is
+byte-identical across runs; CI executes `--smoke` twice and diffs.
+
+  PYTHONPATH=src python benchmarks/serving_autopilot.py --smoke
+  PYTHONPATH=src python benchmarks/serving_autopilot.py \
+      --steps 240 --scenarios zipf,scan_flood --out autopilot.json
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.autopilot.bench import run_suite  # noqa: E402
+from repro.autopilot.traces import SCENARIOS  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenarios", default=",".join(SCENARIOS),
+                    help="comma-separated scenario names")
+    ap.add_argument("--steps", type=int, default=240,
+                    help="trace length in decode steps")
+    ap.add_argument("--step-time-ms", type=float, default=250.0,
+                    help="modeled compute per step (ms)")
+    ap.add_argument("--l-blk-kib", type=float, default=128.0,
+                    help="object size (KiB)")
+    ap.add_argument("--dram-frac", type=float, default=0.35,
+                    help="DRAM capacity as a fraction of the recurring "
+                         "working set")
+    ap.add_argument("--alpha-accel", type=float, default=4.0,
+                    help="normalized rent of the serving resource a "
+                         "demand miss idles ($/s, NAND die == 1 — the "
+                         "same units as alpha_core); enters both the "
+                         "cost model and the gate's break-even")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace (120 steps) for the CI "
+                         "determinism gate")
+    ap.add_argument("--out", type=pathlib.Path, default=None,
+                    help="also write the JSON report here")
+    args = ap.parse_args()
+
+    scenarios = [s for s in str(args.scenarios).split(",") if s]
+    n_steps = 120 if args.smoke else args.steps
+    report = run_suite(
+        scenarios, n_steps=n_steps,
+        step_time=args.step_time_ms * 1e-3,
+        l_blk=int(args.l_blk_kib * 1024), dram_frac=args.dram_frac,
+        alpha_accel=args.alpha_accel, seed=args.seed)
+    report["params"] = {
+        "scenarios": scenarios, "n_steps": n_steps,
+        "step_time_ms": args.step_time_ms, "l_blk_kib": args.l_blk_kib,
+        "dram_frac": args.dram_frac, "alpha_accel": args.alpha_accel,
+        "seed": args.seed,
+    }
+    js = json.dumps(report, sort_keys=True, indent=2)
+    if args.out:
+        args.out.write_text(js + "\n")
+    print(js)
+
+    print(f"\n{'scenario':>12s} {'mode':>9s} {'$/tok':>10s} "
+          f"{'stall us/tok':>13s} {'rent':>7s} {'flashIO':>8s} "
+          f"{'stall$':>7s}", file=sys.stderr)
+    for cell in report["scenarios"]:
+        for mode in ("economic", "dram", "flash"):
+            r = cell["runs"][mode]
+            tag = "*" if mode == cell["best_static"] else " "
+            print(f"{cell['scenario']:>12s} {mode:>8s}{tag} "
+                  f"{r['cost_per_token']:10.6f} "
+                  f"{r['per_token_stall']*1e6:13.1f} "
+                  f"{r['cost_dram_rent']:7.3f} {r['cost_flash_io']:8.3f} "
+                  f"{r['cost_stall']:7.3f}", file=sys.stderr)
+        print(f"{'':>12s} gate_wins={cell['gate_wins']} "
+              f"(cost x{cell['cost_ratio_vs_best_static']:.2f} vs best "
+              f"static)", file=sys.stderr)
+    print(f"\ngate wins {report['wins']}/{report['cells']} scenarios "
+          f"(acceptance: >= 3/4)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -41,7 +41,8 @@ from repro.serving.bench import compare_churn, compare_fleet  # noqa: E402
 
 
 def run_sweep(hosts, skews, *, n_sessions, rounds, kv_bytes, decode_steps,
-              step_time, lead, seed, locality=False, churn=None):
+              step_time, lead, seed, locality=False, churn=None,
+              rebalance_rate=None):
     trajectory = []
     for h in hosts:
         for sk in skews:
@@ -49,7 +50,7 @@ def run_sweep(hosts, skews, *, n_sessions, rounds, kv_bytes, decode_steps,
                 n_hosts=h, n_sessions=n_sessions, rounds=rounds,
                 kv_bytes=kv_bytes, decode_steps=decode_steps,
                 step_time=step_time, lead=lead, skew=sk, seed=seed,
-                locality=locality)
+                locality=locality, rebalance_rate=rebalance_rate)
             cell = compare_fleet(**kw)
             if churn:
                 # the cell's async record IS the no-churn baseline
@@ -102,6 +103,10 @@ def main():
     ap.add_argument("--leave-turn", type=int, default=None,
                     help="churn: turn before which the newest host "
                          "leaves again")
+    ap.add_argument("--pace-gbs", type=float, default=None,
+                    help="churn: cap rebalance streams at this many "
+                         "GB/s per source host (token bucket); default "
+                         "unpaced")
     ap.add_argument("--smoke", action="store_true",
                     help="small fast defaults (4 hosts) for CI "
                          "determinism; explicit flags still apply")
@@ -142,7 +147,9 @@ def main():
                   decode_steps=arg("decode_steps"),
                   step_time=arg("step_time_ms") * 1e-3,
                   lead=lead, seed=args.seed, locality=args.locality,
-                  churn=churn)
+                  churn=churn,
+                  rebalance_rate=(args.pace_gbs * 1e9
+                                  if args.pace_gbs else None))
 
     trajectory = run_sweep(hosts, skews, **params)
     report = {"params": {**params, "hosts": hosts, "skews": skews},

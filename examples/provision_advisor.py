@@ -1,11 +1,20 @@
 """Provisioning advisor — the paper's §V framework as a CLI.
 
-Given a workload (size, throughput, locality, block size, latency SLO)
-and a platform, reports viability (T_B/T_S/T_C), the economics-optimal
-DRAM capacity, and a concrete upgrade recommendation.
+Two modes:
+
+* **analytic** (default): given an *assumed* log-normal workload (size,
+  throughput, locality, block size, latency SLO) and a platform, report
+  viability (T_B/T_S/T_C), the economics-optimal DRAM capacity, and an
+  upgrade recommendation.
+* **live** (`--trace <scenario>`): replay one of the autopilot trace
+  scenarios (zipf, scan_flood, diurnal, multi_tenant) through a
+  break-even-gated TieredStore and run the `autopilot.ProvisionAdvisor`
+  on what the runtime *measured* — per-class reuse histograms, tier
+  stats — instead of an assumed distribution.
 
   PYTHONPATH=src python examples/provision_advisor.py \\
       --platform gpu --l-blk 512 --throughput-gbs 200 --tail-us 13
+  PYTHONPATH=src python examples/provision_advisor.py --trace scan_flood
 """
 import argparse
 import sys
@@ -16,6 +25,36 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 from repro.core import (CPU_PLATFORM, GPU_PLATFORM, LatencyTargets,
                         LogNormalWorkload, analyze_platform)
 from repro.core import units
+
+
+def run_live(args):
+    from repro.autopilot.bench import run_scenario
+    from repro.autopilot.traces import SCENARIOS
+    if args.trace not in SCENARIOS:
+        sys.exit(f"--trace must be one of {SCENARIOS}")
+    rec = run_scenario(args.trace, "economic", n_steps=args.steps,
+                       l_blk=int(args.obj_kib * 1024))
+    print(f"scenario: {args.trace} ({int(rec['accesses'])} accesses, "
+          f"{rec['horizon']:.1f}s modeled)")
+    print(f"served at {rec['per_token_stall']*1e6:.1f}us/token stall, "
+          f"modeled ${rec['cost_per_token']:.6f}/token "
+          f"(normalized units)\n")
+    adv = rec["advice"]
+    print(f"  break-even tau  : {adv['tau_be']:.3f}s")
+    print(f"  resident        : "
+          f"{units.human_bytes(adv['resident_bytes'])}")
+    print(f"  measured hot set: {units.human_bytes(adv['hot_bytes'])} "
+          f"({adv['hot_fraction']*100:.0f}% of resident)")
+    print(f"  provision DRAM  : "
+          f"{units.human_bytes(adv['recommended_dram_bytes'])} across "
+          f"{adv['recommended_hosts']} host(s)")
+    print(f"  limit           : {adv['limit']}")
+    for cls, row in adv["classes"].items():
+        med = row["median_interval"]
+        med = f"{med:.3f}s" if isinstance(med, float) else "unmeasured"
+        print(f"    class {cls:12s} keys={int(row['keys']):5d} "
+              f"median={med:>10s} hot={row['hot_fraction']*100:5.1f}%")
+    print(f"\n  VERDICT: {adv['verdict']}")
 
 
 def main():
@@ -29,7 +68,19 @@ def main():
     ap.add_argument("--tail-us", type=float, default=13.0)
     ap.add_argument("--dram-gb", type=float, default=0.0,
                     help="fixed DRAM capacity (0 = provision freely)")
+    ap.add_argument("--trace", default=None,
+                    help="live mode: replay this autopilot trace "
+                         "scenario and advise from measured telemetry")
+    ap.add_argument("--steps", type=int, default=240,
+                    help="live mode: trace length in decode steps")
+    ap.add_argument("--obj-kib", type=float, default=128.0,
+                    help="live mode: object size in KiB (distinct from "
+                         "--l-blk, which is the analytic mode's block "
+                         "size in bytes)")
     args = ap.parse_args()
+
+    if args.trace:
+        return run_live(args)
 
     plat = GPU_PLATFORM if args.platform == "gpu" else CPU_PLATFORM
     if args.dram_gb:

@@ -1,0 +1,15 @@
+"""Economics-in-the-loop autopilot: online reuse tracking (ghost cache +
+decayed log-bucket sketch, Pallas-batched), break-even admission for the
+tiered runtime, and a live provisioning advisor over fabric telemetry.
+"""
+from .advisor import ProvisionAdvice, ProvisionAdvisor
+from .gate import EconomicGate, GateStats, default_classify
+from .reuse import ReuseTracker
+from .traces import SCENARIOS, Trace, generate
+
+__all__ = [
+    "EconomicGate", "GateStats", "default_classify",
+    "ProvisionAdvice", "ProvisionAdvisor",
+    "ReuseTracker",
+    "SCENARIOS", "Trace", "generate",
+]

@@ -1,0 +1,229 @@
+"""ProvisionAdvisor — live, trace-driven provisioning guidance.
+
+`core.platform.analyze_platform` answers the paper's §V questions for an
+*assumed* (log-normal) workload. The advisor answers them for the
+workload the runtime actually served: it consumes the ReuseTracker's
+decayed per-class interval histograms (what reuse intervals really look
+like right now), the store/fabric's `TierStats` (what the tiers really
+did), and any `RebalanceStats` (what elasticity really cost), and emits
+the same kind of actionable output — the economically-hot working set,
+the DRAM:flash split to provision, a host count, and whether the
+deployment is capacity- or bandwidth-limited per `core.workload`'s
+T_B/T_S/T_C thresholds.
+
+The bridge is `EmpiricalWorkload`: each class's histogram expands into a
+weighted interval sample (bucket-center resolution), samples are scaled
+so classes contribute proportionally to their resident key census, and
+the §V threshold machinery runs unchanged on the result.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.economics import HostConfig, break_even_for_ssd
+from ..core.ssd_model import SsdConfig, iops_ssd_peak
+from ..core.workload import EmpiricalWorkload, thresholds
+from ..core.policy import Tier
+from .gate import default_classify
+from .reuse import ReuseTracker
+
+
+@dataclasses.dataclass
+class ProvisionAdvice:
+    tau_be: float                   # calibrated break-even (s)
+    horizon: float                  # seconds of trace the stats cover
+    resident_bytes: float           # unique payload across tiers
+    dram_capacity: float
+    dram_used: float
+    hot_bytes: float                # economically-hot set |S(tau_be)|*l
+    hot_fraction: float             # hot_bytes / resident_bytes
+    recommended_dram_bytes: float   # provision target for DRAM
+    recommended_hosts: int
+    t_b: float                      # DRAM-bandwidth threshold
+    t_s: float                      # SSD-bandwidth threshold
+    t_c: float                      # DRAM-capacity threshold
+    limit: str                      # capacity | dram-bandwidth |
+    #                                 ssd-bandwidth | none
+    verdict: str
+    classes: Dict[str, Dict[str, float]]
+    rebalance: Optional[Dict[str, float]] = None
+
+    def as_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        return {k: v for k, v in d.items() if v is not None}
+
+    def report(self) -> str:
+        lines = [
+            f"tau_be={self.tau_be:.3f}s  horizon={self.horizon:.1f}s  "
+            f"resident={self.resident_bytes/2**20:.1f}MiB",
+            f"hot set {self.hot_bytes/2**20:.1f}MiB "
+            f"({self.hot_fraction*100:.0f}% of resident) -> provision "
+            f"DRAM {self.recommended_dram_bytes/2**20:.1f}MiB "
+            f"across {self.recommended_hosts} host(s) "
+            f"(now: {self.dram_used/2**20:.1f}/"
+            f"{self.dram_capacity/2**20:.1f}MiB)",
+            f"T_B={self.t_b:.3g}s T_S={self.t_s:.3g}s T_C={self.t_c:.3g}s"
+            f"  limit={self.limit}",
+        ]
+        for cls, row in self.classes.items():
+            med = row["median_interval"]
+            med_s = f"{med:.3f}s" if med == med else "unmeasured"
+            lines.append(
+                f"  class {cls:12s} keys={int(row['keys']):5d} "
+                f"median={med_s:>10s} hot={row['hot_fraction']*100:5.1f}%")
+        if self.rebalance:
+            lines.append(
+                f"  rebalance: {int(self.rebalance['events'])} event(s), "
+                f"{self.rebalance['bytes_moved']/2**20:.1f}MiB moved "
+                f"({self.rebalance['moved_fraction']*100:.1f}% of "
+                f"resident)")
+        lines.append(f"VERDICT: {self.verdict}")
+        return "\n".join(lines)
+
+
+class ProvisionAdvisor:
+    def __init__(self, host: HostConfig, ssd: SsdConfig, l_blk: float, *,
+                 gamma_rw: float = 9.0, phi_wa: float = 3.0,
+                 dram_bytes_per_host: Optional[float] = None,
+                 headroom: float = 1.25, classify=default_classify):
+        self.host = host
+        self.ssd = ssd
+        self.l_blk = float(l_blk)
+        self.gamma_rw = gamma_rw
+        self.phi_wa = phi_wa
+        self.dram_bytes_per_host = dram_bytes_per_host
+        self.headroom = headroom        # provision above the hot set
+        self.classify = classify
+        self.tau_be = float(break_even_for_ssd(
+            host, ssd, l_blk, gamma_rw=gamma_rw, phi_wa=phi_wa))
+
+    # ----------------------------------------------------------------- util
+    def _census(self, stores) -> Dict[str, Dict[str, float]]:
+        """Per-class resident key/byte counts (one copy per key)."""
+        seen: Dict[object, int] = {}
+        for store in stores:
+            for key in store.keys():
+                if key not in seen:
+                    seen[key] = store.nbytes_of(key)
+        census: Dict[str, Dict[str, float]] = {}
+        for key, nbytes in seen.items():
+            row = census.setdefault(self.classify(key),
+                                    {"keys": 0.0, "bytes": 0.0})
+            row["keys"] += 1
+            row["bytes"] += nbytes
+        return census
+
+    # ----------------------------------------------------------------- main
+    def advise(self, tracker: ReuseTracker, store=None, fabric=None,
+               horizon: Optional[float] = None) -> ProvisionAdvice:
+        """Guidance from live state: pass a single `TieredStore` or a
+        `ShardedTieredStore` fabric (its per-host stores aggregate)."""
+        if (store is None) == (fabric is None):
+            raise ValueError("pass exactly one of store= or fabric=")
+        stores = [store] if store is not None else \
+            list(fabric.hosts.values())
+        clock = stores[0].clock
+        horizon = clock.now() if horizon is None else float(horizon)
+
+        census = self._census(stores)
+        resident = sum(row["bytes"] for row in census.values())
+        dram_cap = sum(s.specs[Tier.DRAM].capacity_bytes for s in stores)
+        dram_used = sum(s.used_bytes(Tier.DRAM) for s in stores)
+
+        # per-class hot fractions + a census-weighted combined workload
+        classes: Dict[str, Dict[str, float]] = {}
+        samples: List[np.ndarray] = []
+        for cls, row in sorted(census.items()):
+            sample = tracker.interval_samples(cls, max_samples=256)
+            if sample.size:
+                wl = EmpiricalWorkload(sample, l_blk=self.l_blk,
+                                       n_blk=row["keys"])
+                hot = float(wl.cached_block_fraction(self.tau_be))
+                median = float(np.median(sample))
+                # class contributes samples proportional to its keys
+                reps = max(1, int(round(row["keys"])))
+                idx = (np.arange(reps) * sample.size // reps)
+                samples.append(sample[idx % sample.size])
+            else:
+                # no measured reuse: economically cold by default
+                hot, median = 0.0, float("nan")
+                samples.append(np.full(max(1, int(row["keys"])),
+                                       self.tau_be * 64.0))
+            classes[cls] = {"keys": row["keys"], "bytes": row["bytes"],
+                            "median_interval": median,
+                            "hot_fraction": hot}
+
+        hot_bytes = sum(row["bytes"] * row["hot_fraction"]
+                        for row in classes.values())
+        target = hot_bytes * self.headroom
+
+        if samples:
+            combined = EmpiricalWorkload(
+                np.concatenate(samples), l_blk=self.l_blk,
+                n_blk=sum(r["keys"] for r in census.values()))
+            b_dram = sum(s.specs[Tier.DRAM].read_bw for s in stores)
+            b_ssd = sum(s.specs[Tier.FLASH].read_bw for s in stores)
+            th = thresholds(combined, b_dram, b_ssd, c_dram=dram_cap)
+            t_b, t_s, t_c = th.t_b, th.t_s, th.t_c
+            if not th.viable:
+                limit = "capacity" if t_c < th.t_v else "none"
+            elif t_b >= t_s and t_b > self.tau_be:
+                limit = "dram-bandwidth"
+            elif t_s > t_b and t_s > self.tau_be:
+                limit = "ssd-bandwidth"
+            elif self.tau_be > t_c:
+                limit = "capacity"
+            else:
+                limit = "none"
+        else:
+            t_b = t_s = t_c = float("nan")
+            limit = "none"
+
+        per_host = self.dram_bytes_per_host or (dram_cap /
+                                                max(len(stores), 1))
+        hosts = max(1, int(np.ceil(target / max(per_host, 1.0))))
+
+        rebalance = None
+        if fabric is not None and fabric.rebalances:
+            moved = float(sum(rb.bytes_moved for rb in fabric.rebalances))
+            rebalance = {
+                "events": float(len(fabric.rebalances)),
+                "bytes_moved": moved,
+                "moved_fraction": moved / max(resident, 1.0),
+            }
+
+        verdict = self._verdict(limit, target, dram_cap, hosts,
+                                len(stores))
+        return ProvisionAdvice(
+            tau_be=self.tau_be, horizon=horizon,
+            resident_bytes=float(resident), dram_capacity=float(dram_cap),
+            dram_used=float(dram_used), hot_bytes=float(hot_bytes),
+            hot_fraction=float(hot_bytes / max(resident, 1.0)),
+            recommended_dram_bytes=float(target),
+            recommended_hosts=hosts, t_b=float(t_b), t_s=float(t_s),
+            t_c=float(t_c), limit=limit, verdict=verdict,
+            classes=classes, rebalance=rebalance)
+
+    def _verdict(self, limit: str, target: float, dram_cap: float,
+                 hosts: int, cur_hosts: int) -> str:
+        if limit == "capacity":
+            return ("capacity-limited: the measured hot set does not fit "
+                    "DRAM; add DRAM or hosts before faster devices")
+        if limit == "dram-bandwidth":
+            return ("dram-bandwidth-limited: the miss path saturates "
+                    "DRAM before capacity matters; faster memory, not "
+                    "more of it")
+        if limit == "ssd-bandwidth":
+            return ("ssd-bandwidth-limited: the uncached stream exceeds "
+                    "flash throughput; add SSDs or spread shards wider")
+        if target > dram_cap:
+            return (f"provision up: grow DRAM to the measured hot set "
+                    f"({hosts} host(s) at current per-host capacity)")
+        if hosts < cur_hosts:
+            return (f"provision down: the measured hot set fits "
+                    f"{hosts} host(s); the fleet is over-provisioned")
+        return ("operate at tau_be: current provisioning matches the "
+                "measured hot set")

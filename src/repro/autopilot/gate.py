@@ -1,0 +1,195 @@
+"""EconomicGate — break-even admission/demotion for the tiered runtime.
+
+`core.policy.TieringPolicy` already moves *resident* objects by their
+EMA'd reuse interval vs the calibrated thresholds. What it cannot do is
+place an object it has never re-observed: the seed runtime admitted
+everything to DRAM and let capacity pressure sort it out (LRU-ish), so
+one scan flood evicts the economically-hot set and every cold write
+pays DRAM rent until eviction.
+
+The gate closes that loop with the paper's own threshold. On every
+`put`/`ingest` the store asks `admit_tier(key, requested, now)`:
+
+  * a key with an EMA (re-observed while resident) follows the
+    inherited hysteresis logic — no behavior change;
+  * a key the ghost cache remembers (evicted, came back) is priced by
+    its *measured* time-since-last-touch;
+  * a first-touch key is priced by its class's decayed sketch quantile
+    (KV sessions, MoE experts, per-tenant streams learn separate
+    priors), and with no class evidence defaults cold — DRAM residency
+    is earned by demonstrated reuse below tau_be, never granted.
+
+Admission to DRAM happens iff the estimate sits below the break-even
+interval `tau_be` (Eq. 1, via `economics.break_even_for_ssd`); the
+inherited multiplicative hysteresis band keeps boundary keys from
+oscillating between admit and demote. HBM residency stays earned-only
+(EMA below tau_hot), never granted at admission.
+
+Construct with explicit thresholds, or `EconomicGate.from_break_even`
+(host + SSD configs -> tau_be) / `from_platform` (feasibility-capped
+IOPS, inherited). The same gate instance (or a per-host factory) plugs
+into `TieredStore`, `ShardedTieredStore`, `DecodeEngine` and
+`ExpertStore` unchanged — they all speak TieringPolicy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..core.economics import HostConfig, break_even_for_ssd
+from ..core.policy import Tier, TieringPolicy
+from ..core.ssd_model import SsdConfig
+from .reuse import ReuseTracker
+
+
+def default_classify(key) -> str:
+    """Key -> class label: the runtime's tuple-key conventions map
+    ("kv", rid) -> "kv", (layer, expert) int pairs -> "expert"; anything
+    else shares one bucket."""
+    if isinstance(key, tuple) and key:
+        if isinstance(key[0], str):
+            return key[0]
+        if all(isinstance(x, (int, np.integer)) for x in key):
+            return "expert"
+    return "obj"
+
+
+@dataclasses.dataclass
+class GateStats:
+    admits_dram: int = 0        # admitted under break-even
+    admits_flash: int = 0       # priced out (or unknown, cold default)
+    readmits_measured: int = 0  # ghost supplied a measured interval
+    prior_decisions: int = 0    # first touch priced by the class sketch
+    cold_defaults: int = 0      # first touch with no class evidence
+
+
+class EconomicGate(TieringPolicy):
+    """TieringPolicy + break-even admission from tracked reuse."""
+
+    def __init__(self, tau_hot: float, tau_be: float, *,
+                 tracker: Optional[ReuseTracker] = None,
+                 classify: Callable[[object], str] = default_classify,
+                 prior_quantile: float = 0.5,
+                 hysteresis: float = 0.25, ema_alpha: float = 0.2):
+        super().__init__(tau_hot=tau_hot, tau_be=tau_be,
+                         hysteresis=hysteresis, ema_alpha=ema_alpha)
+        self.tracker = tracker or ReuseTracker()
+        self.classify = classify
+        self.prior_quantile = prior_quantile
+        self.gate_stats = GateStats()
+
+    # ------------------------------------------------------------ tracking
+    def observe(self, key, now: Optional[float] = None) -> Tier:
+        """Every runtime access (get/put) flows through here: feed the
+        ghost + sketch, then the inherited EMA/hysteresis placement."""
+        if now is None:
+            raise ValueError("EconomicGate requires an explicit clock "
+                             "time (the runtime always passes one)")
+        self.tracker.observe(key, self.classify(key), now)
+        return super().observe(key, now=now)
+
+    # ----------------------------------------------------------- admission
+    def _estimate(self, key, now: float):
+        """Evidence cascade behind every estimate: resident EMA >
+        ghost-measured gap > class sketch prior > nothing. Returns
+        (estimate_or_None, source) with source in {"ema", "ghost",
+        "prior", "none"} — the single place the priority order lives."""
+        ema = self._ema.get(key)
+        if ema is not None:
+            return ema, "ema"
+        last = self.tracker.last_seen(key)
+        if last is not None and now > last:
+            return now - last, "ghost"
+        prior = self.tracker.class_quantile(self.classify(key),
+                                            self.prior_quantile)
+        return (prior, "prior") if prior is not None else (None, "none")
+
+    def estimate_interval(self, key, now: float) -> Optional[float]:
+        """Best reuse-interval estimate for `key` at `now`; None when no
+        evidence exists at any level of the cascade."""
+        return self._estimate(key, now)[0]
+
+    def admit_tier(self, key, requested: Tier, now: float) -> Tier:
+        """Landing tier for a put/ingest: DRAM iff the estimated reuse
+        interval clears break-even; cold (FLASH) when nothing is known.
+        Never admits straight to HBM — that residency is earned by the
+        observed EMA dropping below tau_hot. Records the decision so the
+        first-touch default of `tier_of` agrees with it."""
+        st = self.gate_stats
+        est, source = self._estimate(key, now)
+        if source == "ghost":
+            st.readmits_measured += 1
+        elif source == "prior":
+            st.prior_decisions += 1
+        elif source == "none":
+            st.cold_defaults += 1
+        if est is not None and est < self.tau_be:
+            decided = Tier.DRAM
+            st.admits_dram += 1
+        else:
+            decided = Tier.FLASH
+            st.admits_flash += 1
+        # an explicit colder request (setup pinning data to flash) wins;
+        # the gate only ever *demotes* relative to the caller's ask
+        decided = Tier(max(decided, requested))
+        self._tier[key] = decided
+        return decided
+
+    # ------------------------------------------------------------- eviction
+    def evict_candidates(self, tier: Tier, now: Optional[float] = None,
+                         limit: int = 0):
+        """Demotion order under capacity pressure, staleness-aware: a
+        key's effective interval is max(EMA, time since last touch). The
+        inherited order ranks by EMA alone, so a key that was hot
+        yesterday (small EMA) but has not been touched since squats in
+        DRAM through a hotspot shift; the max() reclaims it first."""
+        if now is None:
+            raise ValueError("EconomicGate requires an explicit clock "
+                             "time (the runtime always passes one)")
+        keys = [k for k, t in self._tier.items() if t == tier]
+
+        def staleness(k):
+            gap = now - self._last_seen.get(k, now)
+            ema = self._ema.get(k)
+            return max(ema if ema is not None else 0.0, gap)
+
+        keys.sort(key=lambda k: -staleness(k))
+        return keys[:limit] if limit else keys
+
+    # -------------------------------------------------------- constructors
+    @classmethod
+    def from_break_even(cls, host: HostConfig, ssd: SsdConfig,
+                        l_blk: float, *, gamma_rw: float = 9.0,
+                        phi_wa: float = 3.0,
+                        iops_ssd: Optional[float] = None,
+                        alpha_stall: float = 0.0,
+                        fetch_seconds: float = 0.0,
+                        tau_hot: Optional[float] = None, **kw):
+        """Thresholds straight from the calibrated economics (Eq. 1):
+        tau_be = break_even_for_ssd(host, ssd, l_blk); tau_hot defaults
+        to tau_be / 50 (the HBM rent heuristic `from_platform` uses).
+
+        The AI-era correction the paper argues for: a serving miss does
+        not just consume an SSD IO, it *stalls the engine* for the fetch.
+        Pass `alpha_stall` (normalized rent of the stalled serving
+        resource, $/s in NAND-die units — the same units alpha_core is
+        in) and `fetch_seconds` (the modeled demand-fetch time, e.g.
+        `SsdQueueModel.service(l_blk, 1).total`) and the miss's stall
+        cost joins Eq. 1's numerator:
+
+            tau_be += alpha_stall * fetch_seconds / dram_rent_rate
+
+        which widens the DRAM set exactly as much as stalled-accelerator
+        time is worth."""
+        tau_be = float(break_even_for_ssd(host, ssd, l_blk,
+                                          gamma_rw=gamma_rw,
+                                          phi_wa=phi_wa,
+                                          iops_ssd=iops_ssd))
+        if alpha_stall and fetch_seconds:
+            rent_rate = l_blk * host.alpha_h_dram / host.c_h_dram_die
+            tau_be += alpha_stall * fetch_seconds / rent_rate
+        if tau_hot is None:
+            tau_hot = tau_be / 50.0
+        return cls(tau_hot=min(tau_hot, tau_be), tau_be=tau_be, **kw)

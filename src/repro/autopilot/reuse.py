@@ -1,0 +1,162 @@
+"""ReuseTracker — online per-key-class reuse-interval estimation.
+
+Two structures, both O(1) per access:
+
+  * a **ghost cache**: key -> last-seen time, kept even after the object
+    is evicted from every tier (bounded size, FIFO on last touch). The
+    ghost is what turns a re-admission into a *measured* reuse interval
+    instead of a first touch — Flashield's trick, pointed at economics:
+    without it every flood re-entry looks new and admission cannot
+    distinguish "was here, came back fast" from "never seen".
+  * a per-class **decayed log-bucket interval histogram** (the sketch):
+    bucket b covers [tau0 * 2^b, tau0 * 2^(b+1)); each observed interval
+    increments its (class, bucket) cell and the whole sketch ages by
+    `decay` per batch, so estimates track drift (diurnal shifts,
+    tenant bursts). Classes are caller-defined strings — "kv" sessions,
+    "expert" weights, per-tenant streams — registered on first use.
+
+The batched update path runs the `kernels/reuse_sketch` Pallas kernel
+(thousands of keys per decode step in one launch); `use_kernel=False`
+uses the numpy oracle, which is update-for-update identical — the
+default here, since the CPU containers this repo tests on would pay
+interpret-mode overhead per step for bit-identical results.
+
+Class quantiles of the sketch answer "what reuse interval should I
+assume for a key I know nothing about" (the EconomicGate's first-touch
+prior) and, expanded to a weighted sample, feed `core.workload`'s
+EmpiricalWorkload for the ProvisionAdvisor's threshold analysis.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..kernels.reuse_sketch.ref import reference_reuse_sketch
+
+
+class ReuseTracker:
+    def __init__(self, n_buckets: int = 32, tau0: float = 1e-3,
+                 decay: float = 0.995, ghost_capacity: int = 1 << 16,
+                 max_classes: int = 8, use_kernel: bool = False):
+        if n_buckets < 2 or tau0 <= 0 or not 0.0 < decay <= 1.0:
+            raise ValueError("invalid sketch parameters")
+        self.n_buckets = n_buckets
+        self.tau0 = float(tau0)
+        self.decay = float(decay)
+        self.ghost_capacity = int(ghost_capacity)
+        self.max_classes = int(max_classes)
+        self.use_kernel = use_kernel
+        self.hist = np.zeros((max_classes, n_buckets), np.float32)
+        self._class_ids: Dict[str, int] = {}
+        self._last_seen: "OrderedDict[object, float]" = OrderedDict()
+        self.observed = 0           # accesses fed in
+        self.measured = 0           # of those, with a measured interval
+
+    # ------------------------------------------------------------- classes
+    def class_id(self, cls: str) -> int:
+        cid = self._class_ids.get(cls)
+        if cid is None:
+            if len(self._class_ids) >= self.max_classes:
+                raise ValueError(
+                    f"more than {self.max_classes} key classes; raise "
+                    f"max_classes")
+            cid = len(self._class_ids)
+            self._class_ids[cls] = cid
+        return cid
+
+    @property
+    def classes(self) -> List[str]:
+        return list(self._class_ids)
+
+    # ------------------------------------------------------------ tracking
+    def _touch(self, key, now: float) -> float:
+        """Update the ghost; returns the measured interval (<= 0 when the
+        key is new to the ghost)."""
+        last = self._last_seen.pop(key, None)
+        self._last_seen[key] = now
+        while len(self._last_seen) > self.ghost_capacity:
+            self._last_seen.popitem(last=False)
+        if last is None:
+            return 0.0
+        return max(now - last, 1e-9)
+
+    def observe(self, key, cls: str, now: float) -> Optional[float]:
+        """Single-key path; returns the measured interval or None."""
+        iv = self.observe_batch([key], [cls], now)
+        return iv[0] if iv[0] > 0 else None
+
+    def observe_batch(self, keys: Sequence[object], classes: Sequence[str],
+                      now: float) -> np.ndarray:
+        """Feed one step's accesses; returns the measured intervals
+        (<= 0 where the key was a first touch). One sketch update — the
+        Pallas kernel when `use_kernel`, else the bit-identical oracle."""
+        n = len(keys)
+        intervals = np.zeros(n, np.float32)
+        cids = np.empty(n, np.int32)
+        for i, (key, cls) in enumerate(zip(keys, classes)):
+            intervals[i] = self._touch(key, now)
+            cids[i] = self.class_id(cls)
+        self.observed += n
+        self.measured += int((intervals > 0).sum())
+        if self.use_kernel:
+            from ..kernels.reuse_sketch.ops import reuse_sketch_update
+            self.hist = np.asarray(reuse_sketch_update(
+                self.hist, intervals, cids, tau0=self.tau0,
+                decay=self.decay))
+        else:
+            self.hist = reference_reuse_sketch(
+                self.hist, intervals, cids, tau0=self.tau0,
+                decay=self.decay)
+        return intervals
+
+    def last_seen(self, key) -> Optional[float]:
+        return self._last_seen.get(key)
+
+    # ----------------------------------------------------------- estimates
+    def bucket_centers(self) -> np.ndarray:
+        """Geometric center of each bucket (seconds)."""
+        return self.tau0 * np.exp2(np.arange(self.n_buckets) + 0.5)
+
+    def class_mass(self, cls: str) -> float:
+        cid = self._class_ids.get(cls)
+        return float(self.hist[cid].sum()) if cid is not None else 0.0
+
+    def class_quantile(self, cls: str, q: float = 0.5) -> Optional[float]:
+        """Interval at cumulative mass `q` of the class's decayed
+        histogram (bucket-center resolution); None when the class has
+        (essentially) no measured mass yet."""
+        cid = self._class_ids.get(cls)
+        if cid is None:
+            return None
+        row = self.hist[cid]
+        total = float(row.sum())
+        if total < 1e-6:
+            return None
+        cum = np.cumsum(row)
+        b = int(np.searchsorted(cum, q * total, side="left"))
+        return float(self.bucket_centers()[min(b, self.n_buckets - 1)])
+
+    def interval_samples(self, cls: str,
+                         max_samples: int = 512) -> np.ndarray:
+        """Expand the class histogram into a representative interval
+        sample (bucket centers repeated by normalized weight) — the
+        input `core.workload.EmpiricalWorkload` takes. Deterministic."""
+        cid = self._class_ids.get(cls)
+        if cid is None:
+            return np.zeros(0)
+        row = self.hist[cid]
+        total = float(row.sum())
+        if total < 1e-6:
+            return np.zeros(0)
+        reps = np.round(row / total * max_samples).astype(int)
+        centers = self.bucket_centers()
+        out = np.repeat(centers, reps)
+        if out.size == 0:                       # all mass in tiny slivers
+            out = centers[np.argmax(row)][None]
+        return out
+
+    def histogram(self, cls: str) -> Optional[np.ndarray]:
+        cid = self._class_ids.get(cls)
+        return None if cid is None else self.hist[cid].copy()

@@ -1,0 +1,29 @@
+"""Pure-numpy oracle for the decayed reuse-interval sketch update.
+
+All arithmetic is float32 to match the kernel bit-for-bit: the bucket of
+an interval is floor(log2(interval / tau0)) clipped to [0, B), computed
+in float32 in both implementations, so bucket counts are tolerance-exact
+(identical) between kernel and oracle.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def reference_reuse_sketch(hist, intervals, class_ids, *, tau0: float,
+                           decay: float):
+    """hist [C, B] float32; intervals [N] float32 (<= 0 marks an invalid
+    slot: first touch or padding — skipped); class_ids [N] int32 (out of
+    range also skipped). Returns decay * hist + per-(class, bucket)
+    counts of this batch."""
+    hist = np.asarray(hist, np.float32)
+    intervals = np.asarray(intervals, np.float32)
+    class_ids = np.asarray(class_ids, np.int32)
+    C, B = hist.shape
+    valid = (intervals > 0) & (class_ids >= 0) & (class_ids < C)
+    safe = np.maximum(intervals, np.float32(1e-30))
+    b = np.floor(np.log2(safe / np.float32(tau0), dtype=np.float32))
+    b = np.clip(b, 0, B - 1).astype(np.int32)
+    counts = np.zeros((C, B), np.float32)
+    np.add.at(counts, (class_ids[valid], b[valid]), np.float32(1.0))
+    return np.float32(decay) * hist + counts

@@ -42,6 +42,12 @@ subject to the destination's write shielding exactly like a demotion.
 Each call returns a `RebalanceStats` (keys/bytes moved vs resident) so
 benchmarks can price the rebalance tax in stall per token; serving
 continues throughout, it only queues behind the rebalance traffic.
+`rebalance_rate=` caps the streams with a per-source token bucket
+(bytes/s): each stream's flash read is released only after the bucket
+drains the previous streams, bounding the tax under short prefetch
+leads. Mid-rebalance restores at the destination are priced
+conservatively: the destination store gates reads of a streamed key on
+its NIC delivery time (readability gating, see `TieredStore.ingest`).
 
 Admission control rides in from `TieredStore`: pass
 `write_shield_depth=k` and each host defers demotion writes while its
@@ -57,11 +63,13 @@ experts so popular ones are usually a local flash read. The requested
 replication degree the old host count could not hold.
 
 Locality-aware scheduling: `preferred_host(key)` answers "where should
-this session resume / this expert be fetched" — the first current
-holder in ring order, which turns the remote NIC + remote-flash
-composition into a plain local read. `prefetch_lead_steps` sizes the
-prefetch lead from the owner flash tier's calibrated open-loop p99 (plus
-the NIC leg for remote fetches) instead of a fixed step count.
+this session resume / this expert be fetched" — the least-loaded
+current holder (resident-tier + NIC queue depth, ties in ring order),
+which turns the remote NIC + remote-flash composition into a plain
+local read and spreads hot replicated keys across their holders.
+`prefetch_lead_steps` sizes the prefetch lead from the owner flash
+tier's calibrated open-loop p99 (plus the NIC leg for remote fetches)
+instead of a fixed step count.
 """
 from __future__ import annotations
 
@@ -208,9 +216,12 @@ class ShardedTieredStore:
                  clock=None, sim_cfg=None,
                  net_model: Optional[NetQueueModel] = None,
                  write_shield_depth: Optional[int] = None,
-                 vnodes: int = 64, topology=None):
+                 vnodes: int = 64, topology=None,
+                 rebalance_rate: Optional[float] = None):
         if n_hosts < 1:
             raise ValueError("need at least one host")
+        if rebalance_rate is not None and rebalance_rate <= 0:
+            raise ValueError("rebalance_rate must be positive bytes/s")
         self.clock = ensure_clock(clock)
         if policy_factory is None:
             policy_factory = lambda h: TieringPolicy(  # noqa: E731
@@ -221,6 +232,9 @@ class ShardedTieredStore:
         self._sim_cfg = sim_cfg
         self._write_shield_depth = write_shield_depth
         self.vnodes = vnodes
+        # token-bucket cap on rebalance streams, bytes/s per source host
+        # (None = stream at full rate, the pre-pacing behavior)
+        self.rebalance_rate = rebalance_rate
         if net_model is None:
             net_model = NetQueueModel(topology=topology)
         elif topology is not None:
@@ -343,12 +357,25 @@ class ShardedTieredStore:
 
     def preferred_host(self, key,
                        default: Optional[int] = None) -> Optional[int]:
-        """Locality-aware routing: the host a resume/fetch should be
-        scheduled on — the first current holder in ring order (serving
-        there turns the remote NIC + remote-flash composition into a
-        local read), else `default`."""
+        """Locality-aware, replica-aware routing: the *least-loaded*
+        current holder — serving there turns the remote NIC +
+        remote-flash composition into a local read, and with replicas
+        the read load spreads by live queue depth (the holder's resident
+        tier plus its NIC lane) instead of always hammering the first
+        ring owner. Ties break in ring order, so the single-replica
+        behavior is unchanged. Returns `default` when nothing holds the
+        key."""
         held = self.holders(key)
-        return held[0] if held else default
+        if len(held) <= 1:
+            return held[0] if held else default
+
+        def load(pos_host):
+            pos, h = pos_host
+            store = self.hosts[h]
+            depth = store.runtime.queue_depth(store.tier_of(key))
+            return (depth + self.nic[h].queue_depth(NIC), pos)
+
+        return min(enumerate(held), key=load)[1]
 
     def _targets(self, key) -> List[int]:
         r = self._key_replicas.get(key, 1)
@@ -479,6 +506,11 @@ class ShardedTieredStore:
                    extra_sources: Tuple[int, ...] = ()) -> RebalanceStats:
         rb = RebalanceStats(action=action, host=host,
                             t_start=self.clock.now())
+        # rebalance pacing: per-source token bucket at `rebalance_rate`
+        # bytes/s — each stream's flash read is released only when the
+        # bucket has drained the previous streams' bytes, so the tax on
+        # concurrent serving stays bounded even under short leads
+        pace: Dict[int, float] = {}
         scan = list(self.host_ids) + [h for h in extra_sources
                                       if h not in self.host_ids]
         resident = {k for h in scan for k in self.hosts[h].keys()}
@@ -501,7 +533,13 @@ class ShardedTieredStore:
             for dst in targets:
                 if dst in held:
                     continue
-                value, tr = self.hosts[src].read_for_transfer(key)
+                release = None
+                if self.rebalance_rate is not None:
+                    release = max(self.clock.now(),
+                                  pace.get(src, self.clock.now()))
+                    pace[src] = release + nbytes / self.rebalance_rate
+                value, tr = self.hosts[src].read_for_transfer(
+                    key, not_before=release)
                 nic_tr = self._nic_submit(src, dst, key, nbytes,
                                           kind="rebalance",
                                           not_before=tr.done_t)

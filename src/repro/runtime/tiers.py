@@ -35,6 +35,19 @@ Capacity contract: an object larger than its target tier's capacity is
 demoted straight to the first tier that can hold it (ultimately FLASH,
 the capacity tier) instead of silently overcommitting; an object larger
 than every tier raises ValueError.
+
+Economic admission (autopilot): when the policy exposes `admit_tier`
+(see `autopilot.gate.EconomicGate`), every `put` asks it where the
+object should land — DRAM iff the tracked reuse-interval estimate
+clears the calibrated break-even threshold — instead of honoring the
+requested tier blindly. Plain `TieringPolicy` has no such hook and
+keeps the seed behavior.
+
+Readability gating (conservative rebalance pricing): an `ingest` whose
+bytes are still on the wire (`not_before` = the NIC delivery time)
+records that arrival horizon, and any fetch of the key issued before it
+is gated on it — a mid-rebalance restore pays for the in-flight leg
+instead of being served structurally-now at the destination.
 """
 from __future__ import annotations
 
@@ -147,6 +160,9 @@ class TieredStore:
         # shielded rebalance write behind its upstream NIC delivery
         self._deferred_writes: List[
             Tuple[Tier, object, int, Optional[float]]] = []
+        # key -> wire-arrival horizon of an in-flight rebalance ingest;
+        # reads issued before it are gated on it (readability gating)
+        self._arrival_t: Dict[object, float] = {}
 
     # ----------------------------------------------------------------- util
     def tier_of(self, key) -> Optional[Tier]:
@@ -188,6 +204,12 @@ class TieredStore:
         cur = self.tier_of(key)
         if cur is not None:
             self._remove(key, cur)
+        admit = getattr(self.policy, "admit_tier", None)
+        if admit is not None:
+            # economic admission: the gate prices the object's tracked
+            # reuse estimate against break-even and may demote the
+            # requested landing tier (it never promotes past the ask)
+            tier = admit(key, tier, now=self.clock.now())
         tier = self._fit_tier(tier, value.nbytes)
         self._ensure_room(tier, value.nbytes)
         self._data[tier][key] = value
@@ -207,7 +229,8 @@ class TieredStore:
             elif t < cur:
                 self.stats[t].misses += 1
         value = self._data[cur][key]
-        tr = self.runtime.submit(cur, key, value.nbytes, kind="fetch")
+        tr = self.runtime.submit(cur, key, value.nbytes, kind="fetch",
+                                 not_before=self._arrival_gate(key))
         self.stats[cur].bytes_read += value.nbytes
         return PendingFetch(store=self, key=key, tier=cur, transfer=tr,
                             value=value)
@@ -244,18 +267,36 @@ class TieredStore:
         calls `.wait()` when the value is actually needed."""
         return self._issue_fetch(key)
 
-    def read_for_transfer(self, key):
+    def read_for_transfer(self, key, not_before: Optional[float] = None):
         """Raw outbound read for fabric rebalance streaming: occupies the
         resident tier's queue and counts bytes, but is neither a cache
         hit nor a policy observation (rebalance traffic must not promote
-        keys or skew hit rates). Returns (value, transfer)."""
+        keys or skew hit rates). `not_before` gates the read start (the
+        fabric's pacing token bucket); a pending wire arrival of the key
+        itself gates it as well. Returns (value, transfer)."""
         cur = self.tier_of(key)
         if cur is None:
             raise KeyError(key)
         value = self._data[cur][key]
-        tr = self.runtime.submit(cur, key, value.nbytes, kind="rebalance")
+        gate = self._arrival_gate(key)
+        if not_before is not None:
+            gate = not_before if gate is None else max(gate, not_before)
+        tr = self.runtime.submit(cur, key, value.nbytes, kind="rebalance",
+                                 not_before=gate)
         self.stats[cur].bytes_read += value.nbytes
         return value, tr
+
+    def _arrival_gate(self, key) -> Optional[float]:
+        """Readability gate: the NIC-delivery horizon of an in-flight
+        rebalance ingest of `key`, if still in the future (entries are
+        pruned once passed)."""
+        t = self._arrival_t.get(key)
+        if t is None:
+            return None
+        if self.clock.now() >= t - 1e-12:
+            del self._arrival_t[key]
+            return None
+        return t
 
     def ingest(self, key, value: np.ndarray, tier: Tier = Tier.FLASH,
                not_before: Optional[float] = None):
@@ -265,14 +306,18 @@ class TieredStore:
         flight (depth >= `write_shield_depth`) the queue charge parks in
         the deferred list instead of inflating the burst's tail.
         `not_before` gates an unshielded write on the upstream NIC
-        delivery. No policy observation: arrival by rebalance is not a
-        reuse event."""
+        delivery, and also records the key's readability horizon: a
+        fetch issued before the bytes arrive is gated on the delivery
+        instead of being served structurally-now. No policy observation:
+        arrival by rebalance is not a reuse event."""
         value = np.asarray(value)
         cur = self.tier_of(key)
         if cur is not None:
             self._remove(key, cur)
         tier = self._fit_tier(tier, value.nbytes)
         self._ensure_room(tier, value.nbytes)
+        if not_before is not None and not_before > self.clock.now():
+            self._arrival_t[key] = float(not_before)
         self._data[tier][key] = value
         self._used[tier] += value.nbytes
         st = self.stats[tier]
@@ -299,6 +344,8 @@ class TieredStore:
     def _remove(self, key, tier: Tier):
         v = self._data[tier].pop(key)
         self._used[tier] -= v.nbytes
+        # a fresh copy supersedes any pending wire arrival of the key
+        self._arrival_t.pop(key, None)
         # a parked deferred write for this key is now stale (the object
         # was deleted, overwritten or moved on): drop it so the shield
         # never submits a phantom write for data that no longer exists
@@ -317,7 +364,12 @@ class TieredStore:
             self._move(key, src, dst)
 
     def _move(self, key, src: Tier, dst: Tier):
+        # a tier move does not materialize in-flight bytes: keep the
+        # readability gate a pending rebalance ingest recorded
+        arrival = self._arrival_t.get(key)
         v = self._remove(key, src)
+        if arrival is not None:
+            self._arrival_t[key] = arrival
         dst = self._fit_tier(dst, v.nbytes)
         if dst == src:
             # an oversized promotion target redirected back onto the

@@ -146,7 +146,8 @@ def multi_host_session_bench(mode: str = "async", *,
                              write_shield_depth=None,
                              topology=None,
                              locality: bool = False,
-                             churn: Optional[Dict[str, int]] = None
+                             churn: Optional[Dict[str, int]] = None,
+                             rebalance_rate: Optional[float] = None
                              ) -> Dict[str, float]:
     """Fleet serving on the sharded fabric's shared virtual clock.
 
@@ -160,19 +161,22 @@ def multi_host_session_bench(mode: str = "async", *,
     host's vantage point, `lead` steps before the current turn ends
     (`lead="p99"` sizes it per turn from the owner flash tail + NIC leg).
 
-    `locality=True` reroutes each turn to the first host already holding
-    the session's KV (the scheduled host is only a fallback), turning
-    remote restores into local reads. `churn={"join_turn": t}` joins a
-    host before turn t (`"leave_turn"`/`"leave_host"` removes one);
-    rebalance streams share the queues with serving traffic, and the
-    rebalance tallies land in the returned record.
+    `locality=True` reroutes each turn to the least-loaded host already
+    holding the session's KV (the scheduled host is only a fallback),
+    turning remote restores into local reads. `churn={"join_turn": t}`
+    joins a host before turn t (`"leave_turn"`/`"leave_host"` removes
+    one); rebalance streams share the queues with serving traffic, and
+    the rebalance tallies land in the returned record.
+    `rebalance_rate` caps those streams per source host (bytes/s token
+    bucket) so the tax stays bounded under short leads.
     """
     assert mode in ("sync", "async"), mode
     clock = VirtualClock()
     fabric = ShardedTieredStore(
         n_hosts, policy_factory=_pinned_flash_policy, clock=clock,
         sim_cfg=sim_cfg, net_model=net_model,
-        write_shield_depth=write_shield_depth, topology=topology)
+        write_shield_depth=write_shield_depth, topology=topology,
+        rebalance_rate=rebalance_rate)
     blob = np.zeros(max(kv_bytes // 4, 1), np.float32)
     keys = [("kv", f"s{i}") for i in range(n_sessions)]
     for i, k in enumerate(keys):

@@ -16,7 +16,11 @@ Expert streaming rides the same async movement engine as serving KV:
 router just selected for the *next* layer/step, and `fetch_expert`
 blocks only on the unfinished remainder — cold-expert flash reads
 overlap with the current layer's compute, with queueing-aware service
-times from the calibrated ssdsim model.
+times from the calibrated ssdsim model. `decode_step` wires the two
+into the MoE decode path: layer L's router output triggers layer L+1's
+prefetch one layer of compute ahead, and every routing feeds the
+placement policy — with an `autopilot.gate.EconomicGate` that is the
+break-even admission loop for expert weights.
 
 Fleet mode: construct with `fabric=` (a
 `repro.runtime.fabric.ShardedTieredStore`), `host=` and `replicas=` to
@@ -154,3 +158,49 @@ class ExpertStore:
         if pf is None:
             pf = self.store.get_async(key)
         return pf.wait()
+
+    # ----------------------------------------------------- decode pipeline
+    def decode_step(self, routings: Dict[int, np.ndarray], *,
+                    layer_time: float, tokens: int = 1) -> Dict[str, float]:
+        """One modeled MoE decode step with layer-pipelined expert
+        streaming: when layer L's router output lands, the experts layer
+        L+1 selects are prefetched *before* L's own (blocking) fetches
+        and L's compute, so each cold-expert flash read overlaps a full
+        layer of compute instead of stalling its own layer.
+
+        `routings` maps layer -> router-selected expert ids for this
+        step (from the model's routers, a router trace, or a lookahead
+        predictor). Every routing is also observed by the policy — with
+        an `EconomicGate` this is what feeds the reuse sketch, so cold
+        experts earn DRAM residency exactly when their measured reuse
+        clears break-even. The first layer has no upstream to hide
+        behind; its unprefetched fetches stall (unless a previous step
+        left them resident in a fast tier).
+
+        Returns modeled totals: decode-visible stall, fetches issued,
+        prefetches started."""
+        self.steps += 1
+        self.tokens_per_step = tokens
+        stall = 0.0
+        fetched = 0
+        prefetched = 0
+        layers = sorted(routings)
+        for i, layer in enumerate(layers):
+            # raw routing keeps per-token multiplicity for the
+            # popularity counts; the fetch loop below dedups itself
+            self.observe_routing(layer, routings[layer],
+                                 now=self.clock.now())
+            ids = np.unique(np.asarray(routings[layer]).ravel())
+            if i + 1 < len(layers):
+                prefetched += self.prefetch_experts(
+                    layers[i + 1], routings[layers[i + 1]])
+            for e in ids:
+                if self.store.tier_of((layer, int(e))) is None:
+                    continue            # expert not materialized here
+                t0 = self.clock.now()
+                self.fetch_expert(layer, int(e))
+                stall += self.clock.now() - t0
+                fetched += 1
+            self.store.runtime.advance(layer_time)
+        return {"stall": stall, "fetched": float(fetched),
+                "prefetched": float(prefetched)}

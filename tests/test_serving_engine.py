@@ -67,6 +67,36 @@ def test_engine_staggered_admission(setup):
     assert all(len(r.generated) == 5 for r in reqs)
 
 
+def test_engine_pause_lands_kv_per_economic_gate(setup):
+    """DecodeEngine + EconomicGate end-to-end: a paused session's KV
+    block is admitted to DRAM or flash by the gate's tracked reuse
+    estimate, not by the requested tier."""
+    from repro.autopilot import EconomicGate
+    from repro.core.policy import Tier
+
+    cfg, rules, params = setup
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, cfg.vocab, 5).astype(np.int32)
+    gate = EconomicGate(tau_hot=1e-6, tau_be=2.0)
+    eng = DecodeEngine(cfg, params, rules, max_slots=2, max_len=64,
+                       policy=gate, step_time=1e-2)
+    req = Request(rid="s", prompt=prompt, max_new=30)
+    eng.admit(req)
+    for _ in range(2):
+        eng.step()
+    # first pause: nothing known about ("kv", "s") -> cold default
+    assert eng.pause("s") == Tier.FLASH
+    assert gate.gate_stats.cold_defaults >= 1
+    # resume + pause again quickly: ghost-measured reuse under tau_be
+    eng.resume("s")
+    for _ in range(2):
+        eng.step()
+    assert eng.pause("s") == Tier.DRAM
+    eng.resume("s")
+    while not req.done:
+        eng.step()
+
+
 def test_engine_pause_resume_roundtrip(setup):
     cfg, rules, params = setup
     rng = np.random.default_rng(2)
