@@ -14,10 +14,17 @@ The economic run also emits the live ProvisionAdvisor output (measured
 hot set, DRAM:flash split, host count, limiting resource) — the same
 telemetry the gate steers by, turned into provisioning guidance.
 
+`--autoscale` runs the closed provisioning loop instead: a one-host
+platform on the diurnal trace where `Platform.autoscale` lets the
+`ProvisionAdvisor` drive `add_host`/`remove_host` (under the rebalance
+pacer) — the fleet grows a host for the peak and hands it back
+off-peak — priced against a static fleet provisioned for the peak.
+
 Everything runs on a VirtualClock with seeded traces, so the JSON is
 byte-identical across runs; CI executes `--smoke` twice and diffs.
 
   PYTHONPATH=src python benchmarks/serving_autopilot.py --smoke
+  PYTHONPATH=src python benchmarks/serving_autopilot.py --autoscale
   PYTHONPATH=src python benchmarks/serving_autopilot.py \
       --steps 240 --scenarios zipf,scan_flood --out autopilot.json
 """
@@ -30,6 +37,38 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 from repro.autopilot.bench import run_suite  # noqa: E402
 from repro.autopilot.traces import SCENARIOS  # noqa: E402
+
+
+def run_autoscale(args):
+    from repro.platform import run_autoscale_bench
+    report = run_autoscale_bench(
+        scenario=args.autoscale_scenario,
+        n_steps=120 if args.smoke else args.steps,
+        step_time=args.step_time_ms * 1e-3,
+        l_blk=int(args.l_blk_kib * 1024),
+        alpha_accel=args.alpha_accel, seed=args.seed)
+    js = json.dumps(report, sort_keys=True, indent=2)
+    if args.out:
+        args.out.write_text(js + "\n")
+    print(js)
+
+    a, s = report["autoscaled"], report["static"]
+    print(f"\n{'arm':>10s} {'hosts':>11s} {'$/tok':>10s} "
+          f"{'stall us/tok':>13s} {'host-sec':>9s}", file=sys.stderr)
+    for name, r in (("autoscaled", a), ("static", s)):
+        span = (f"{int(r['hosts_start'])}->{int(r['hosts_peak'])}->"
+                f"{int(r['hosts_final'])}")
+        print(f"{name:>10s} {span:>11s} {r['cost_per_token']:10.6f} "
+              f"{r['per_token_stall']*1e6:13.1f} "
+              f"{r['host_seconds']:9.1f}", file=sys.stderr)
+    for d in a.get("decisions", []):
+        print(f"  t={int(d['step']):3d} {d['action']:>6s} -> "
+              f"{int(d['n_hosts'])} host(s) (advisor: "
+              f"{int(d['recommended'])}): {d['reason']}", file=sys.stderr)
+    print(f"\nautoscale wins on $/token: {report['autoscale_wins']} "
+          f"(x{report['cost_ratio_vs_static']:.3f} vs static); final "
+          f"fleet within one host of advice: "
+          f"{report['final_within_one_of_advice']}", file=sys.stderr)
 
 
 def main():
@@ -54,9 +93,18 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="short trace (120 steps) for the CI "
                          "determinism gate")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="run the closed provisioning loop on the "
+                         "diurnal trace (advisor-driven add/remove "
+                         "host) vs a peak-provisioned static fleet")
+    ap.add_argument("--autoscale-scenario", default="diurnal",
+                    help="trace scenario for --autoscale")
     ap.add_argument("--out", type=pathlib.Path, default=None,
                     help="also write the JSON report here")
     args = ap.parse_args()
+
+    if args.autoscale:
+        return run_autoscale(args)
 
     scenarios = [s for s in str(args.scenarios).split(",") if s]
     n_steps = 120 if args.smoke else args.steps

@@ -25,10 +25,20 @@ emitted JSON is byte-identical across runs — CI executes `--smoke`
 twice and diffs the outputs as a determinism gate (the suite also does
 this in-process, churn schedule included).
 
+Declarative mode (`--spec fleet.json`, a `repro.platform.HierarchySpec`
+serialized via `spec.to_json()`): the fleet — per-host tier geometry,
+capacity-weighted ring, policy, NIC/topology — compiles from the spec
+instead of the `--hosts` keyword dialect. A homogeneous pinned-flash
+spec reproduces the keyword path byte-for-byte; a heterogeneous spec
+(one host with 2x DRAM) with `--kv-tier dram` shows the weighted ring's
+stall win over `weighting="uniform"`.
+
   PYTHONPATH=src python benchmarks/serving_fleet.py --smoke
   PYTHONPATH=src python benchmarks/serving_fleet.py --smoke --churn
   PYTHONPATH=src python benchmarks/serving_fleet.py --hosts 2,4,8 \
       --skew 0.0,1.2 --lead p99 --locality --out fleet.json
+  PYTHONPATH=src python benchmarks/serving_fleet.py --spec fleet_spec.json \
+      --kv-tier dram
 """
 import argparse
 import json
@@ -37,20 +47,26 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
+from repro.core.policy import Tier  # noqa: E402
 from repro.serving.bench import compare_churn, compare_fleet  # noqa: E402
 
 
 def run_sweep(hosts, skews, *, n_sessions, rounds, kv_bytes, decode_steps,
               step_time, lead, seed, locality=False, churn=None,
-              rebalance_rate=None):
+              rebalance_rate=None, spec=None, kv_tier=Tier.FLASH):
     trajectory = []
     for h in hosts:
         for sk in skews:
             kw = dict(
-                n_hosts=h, n_sessions=n_sessions, rounds=rounds,
+                n_sessions=n_sessions, rounds=rounds,
                 kv_bytes=kv_bytes, decode_steps=decode_steps,
                 step_time=step_time, lead=lead, skew=sk, seed=seed,
-                locality=locality, rebalance_rate=rebalance_rate)
+                locality=locality, rebalance_rate=rebalance_rate,
+                kv_tier=kv_tier)
+            if spec is not None:
+                kw["spec"] = spec
+            else:
+                kw["n_hosts"] = h
             cell = compare_fleet(**kw)
             if churn:
                 # the cell's async record IS the no-churn baseline
@@ -110,6 +126,15 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="small fast defaults (4 hosts) for CI "
                          "determinism; explicit flags still apply")
+    ap.add_argument("--spec", type=pathlib.Path, default=None,
+                    help="declarative mode: compile the fleet from this "
+                         "HierarchySpec JSON (spec.to_json()); --hosts "
+                         "is ignored, the spec defines the fleet")
+    ap.add_argument("--kv-tier", choices=("flash", "dram"),
+                    default="flash",
+                    help="pause/landing tier ask: flash measures the "
+                         "restore path (default); dram exercises "
+                         "capacity placement on heterogeneous specs")
     ap.add_argument("--out", type=pathlib.Path, default=None,
                     help="also write the JSON report here")
     args = ap.parse_args()
@@ -125,7 +150,13 @@ def main():
         v = getattr(args, name)
         return base[name] if v is None else v
 
-    hosts = [int(x) for x in str(arg("hosts")).split(",")]
+    spec = None
+    if args.spec is not None:
+        from repro.platform import HierarchySpec
+        spec = HierarchySpec.from_json(args.spec.read_text())
+        hosts = [spec.n_hosts]
+    else:
+        hosts = [int(x) for x in str(arg("hosts")).split(",")]
     skews = [float(x) for x in str(arg("skew")).split(",")]
     lead = str(arg("lead"))
     lead = lead if lead == "p99" else int(lead)
@@ -151,8 +182,12 @@ def main():
                   rebalance_rate=(args.pace_gbs * 1e9
                                   if args.pace_gbs else None))
 
-    trajectory = run_sweep(hosts, skews, **params)
-    report = {"params": {**params, "hosts": hosts, "skews": skews},
+    trajectory = run_sweep(hosts, skews, spec=spec,
+                           kv_tier=Tier[args.kv_tier.upper()], **params)
+    report = {"params": {**params, "hosts": hosts, "skews": skews,
+                         "kv_tier": args.kv_tier,
+                         "spec": None if spec is None else
+                         json.loads(spec.to_json())},
               "trajectory": trajectory}
     js = json.dumps(report, sort_keys=True, indent=2)
     if args.out:

@@ -1,8 +1,10 @@
 """Quickstart: the five-minute rule, recalibrated — in 60 seconds.
 
 Computes the classical and calibrated break-even intervals, applies
-feasibility constraints, runs the workload-aware platform advisor, and
-derives a live TieringPolicy — the complete RQ1->RQ3 pipeline.
+feasibility constraints, runs the workload-aware platform advisor,
+derives a live TieringPolicy, and finishes with the declarative API:
+one `HierarchySpec` compiling into a running multi-host platform whose
+economics are inputs, not plumbing — the complete RQ1->RQ4 pipeline.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -69,6 +71,39 @@ def main():
     for iv in (0.01, 1.0, 30.0):
         print(f"  object reused every {iv:5.2f}s -> "
               f"{pol.tier_for_interval(iv).name}")
+
+    print()
+    print("=" * 72)
+    print("5. Declare the whole hierarchy (HierarchySpec -> Platform)")
+    print("=" * 72)
+    import numpy as np
+    from repro.platform import (HierarchySpec, HostDecl, Platform,
+                                PolicyDecl, TierDecl)
+    spec = HierarchySpec(
+        # heterogeneous fleet: one big-DRAM host + three standard ones;
+        # the compiled ring weights key ownership by DRAM capacity (2:1)
+        hosts=(HostDecl(tiers={"dram": TierDecl(256e9, 45e9, 5e-7)}),
+               HostDecl(count=3)),
+        policy=PolicyDecl.economic(l_blk=128 << 10),
+        class_priors={"kv": 2.0},       # sessions assumed ~2s reuse
+    )
+    platform = Platform.compile(spec)
+    print(f"  compiled {platform.n_hosts} hosts, ring weights "
+          f"{spec.resolved_weights()}, "
+          f"tau_be={platform.policy(0).tau_be:.1f}s per-host gate")
+    sess = platform.kv_session("user-42")
+    sess.save(np.zeros(1 << 16, np.float32))        # gate picks the tier
+    handle = sess.prefetch()                        # uniform async handle
+    platform.clock.advance(0.01)
+    handle.result()
+    print(f"  kv_session save -> {sess.tier().name}, prefetch overlapped "
+          f"-> done={handle.done()}")
+    print(f"  spec round-trips: "
+          f"{HierarchySpec.from_json(spec.to_json()) == spec}")
+    advice = platform.advise()
+    print(f"  advisor: hot set {advice.hot_bytes/2**20:.2f}MiB -> "
+          f"{advice.recommended_hosts} host(s); platform.autoscale() "
+          f"closes the loop")
 
 
 if __name__ == "__main__":

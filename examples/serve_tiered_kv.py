@@ -2,10 +2,15 @@
 with five-minute-rule KV-cache tiering.
 
 Serves a reduced LM with continuous batching, then pauses sessions and
-shows the TieringPolicy placing their KV blocks across DRAM/flash by
+shows the tiering policy placing their KV blocks across DRAM/flash by
 observed reuse interval, and resumes them transparently — including the
 async-prefetch restore path overlapping the flash fetch with decode on
-the engine's deterministic virtual clock.
+the platform's deterministic virtual clock.
+
+The whole hierarchy is *declared*: a `HierarchySpec` (one host, static
+seconds-scale thresholds, virtual clock, 5ms modeled decode step)
+compiles into the platform, and the engine is a capability from its
+facade — no clock/policy/store threading.
 
   PYTHONPATH=src python examples/serve_tiered_kv.py [--arch gemma-2b]
 """
@@ -20,10 +25,10 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS, get_config
-from repro.core.policy import TieringPolicy
 from repro.models import model as M
 from repro.parallel.sharding import single_device_rules
-from repro.serving.engine import DecodeEngine, Request
+from repro.platform import HierarchySpec, HostDecl, Platform, PolicyDecl
+from repro.serving.engine import Request
 
 
 def main():
@@ -37,13 +42,16 @@ def main():
     rules = single_device_rules()
     params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
 
-    # policy calibrated to seconds-scale thresholds, driven by the
-    # engine's deterministic virtual clock (5ms modeled per decode step)
-    from repro.runtime.clock import VirtualClock
-    policy = TieringPolicy(tau_hot=0.05, tau_be=1.0, ema_alpha=1.0)
-    clock = VirtualClock()
-    eng = DecodeEngine(cfg, params, rules, max_slots=4, max_len=64,
-                       policy=policy, clock=clock, step_time=5e-3)
+    # the hierarchy, declared: one host, seconds-scale static
+    # thresholds, deterministic virtual clock, 5ms modeled decode step
+    spec = HierarchySpec(
+        hosts=(HostDecl(),),
+        policy=PolicyDecl.static(tau_hot=0.05, tau_be=1.0,
+                                 ema_alpha=1.0),
+        step_time=5e-3)
+    platform = Platform.compile(spec)
+    clock = platform.clock
+    eng = platform.engine(cfg, params, rules, max_slots=4, max_len=64)
 
     rng = np.random.default_rng(0)
     reqs = [Request(rid=f"session-{i}",
@@ -88,7 +96,7 @@ def main():
           f"{r1.rid} resumed with {eng.kv_stall_time*1e3:.2f}ms total "
           f"restore stall (prefetch overlapped)")
     print("\n[tier stats]")
-    print(eng.store.report())
+    print(platform.report())
     print("\n[runtime queues]")
     print(eng.store.runtime.report())
 

@@ -88,7 +88,8 @@ class ProvisionAdvisor:
     def __init__(self, host: HostConfig, ssd: SsdConfig, l_blk: float, *,
                  gamma_rw: float = 9.0, phi_wa: float = 3.0,
                  dram_bytes_per_host: Optional[float] = None,
-                 headroom: float = 1.25, classify=default_classify):
+                 headroom: float = 1.25, classify=default_classify,
+                 active_window: Optional[float] = None):
         self.host = host
         self.ssd = ssd
         self.l_blk = float(l_blk)
@@ -97,12 +98,26 @@ class ProvisionAdvisor:
         self.dram_bytes_per_host = dram_bytes_per_host
         self.headroom = headroom        # provision above the hot set
         self.classify = classify
+        # staleness horizon for the hot set: a resident key untouched
+        # for longer than this (per the tracker's ghost) is excluded
+        # from the hot-byte census — without it, yesterday's pool keeps
+        # the recommendation pinned at peak after a diurnal shift,
+        # because the interval *distribution* stays hot while the keys
+        # carrying it go cold. None keeps the census-wide behavior.
+        if active_window is not None and active_window <= 0:
+            raise ValueError("active_window must be positive seconds")
+        self.active_window = active_window
         self.tau_be = float(break_even_for_ssd(
             host, ssd, l_blk, gamma_rw=gamma_rw, phi_wa=phi_wa))
 
     # ----------------------------------------------------------------- util
-    def _census(self, stores) -> Dict[str, Dict[str, float]]:
-        """Per-class resident key/byte counts (one copy per key)."""
+    def _census(self, stores, tracker: Optional[ReuseTracker] = None,
+                now: Optional[float] = None
+                ) -> Dict[str, Dict[str, float]]:
+        """Per-class resident key/byte counts (one copy per key).
+        `active_bytes` restricts to keys touched within `active_window`
+        of `now` (per the tracker's ghost); with no window every
+        resident byte is active."""
         seen: Dict[object, int] = {}
         for store in stores:
             for key in store.keys():
@@ -111,9 +126,18 @@ class ProvisionAdvisor:
         census: Dict[str, Dict[str, float]] = {}
         for key, nbytes in seen.items():
             row = census.setdefault(self.classify(key),
-                                    {"keys": 0.0, "bytes": 0.0})
+                                    {"keys": 0.0, "bytes": 0.0,
+                                     "active_bytes": 0.0})
             row["keys"] += 1
             row["bytes"] += nbytes
+            active = True
+            if (self.active_window is not None and tracker is not None
+                    and now is not None):
+                last = tracker.last_seen(key)
+                active = (last is not None
+                          and now - last <= self.active_window)
+            if active:
+                row["active_bytes"] += nbytes
         return census
 
     # ----------------------------------------------------------------- main
@@ -128,7 +152,7 @@ class ProvisionAdvisor:
         clock = stores[0].clock
         horizon = clock.now() if horizon is None else float(horizon)
 
-        census = self._census(stores)
+        census = self._census(stores, tracker=tracker, now=horizon)
         resident = sum(row["bytes"] for row in census.values())
         dram_cap = sum(s.specs[Tier.DRAM].capacity_bytes for s in stores)
         dram_used = sum(s.used_bytes(Tier.DRAM) for s in stores)
@@ -155,9 +179,15 @@ class ProvisionAdvisor:
             classes[cls] = {"keys": row["keys"], "bytes": row["bytes"],
                             "median_interval": median,
                             "hot_fraction": hot}
+            if self.active_window is not None:
+                classes[cls]["active_bytes"] = row["active_bytes"]
 
-        hot_bytes = sum(row["bytes"] * row["hot_fraction"]
-                        for row in classes.values())
+        # hot bytes scale the *active* census when a staleness window is
+        # set (keys untouched past it are squatters, not hot set)
+        hot_bytes = sum(
+            census[cls]["active_bytes" if self.active_window is not None
+                        else "bytes"] * row["hot_fraction"]
+            for cls, row in classes.items())
         target = hot_bytes * self.headroom
 
         if samples:

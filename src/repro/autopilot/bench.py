@@ -58,6 +58,22 @@ from .traces import SCENARIOS, generate
 
 MODES = ("economic", "dram", "flash")
 
+PAGE_BYTES = 4096               # flash IO accounting granularity
+
+
+def pricing_rates(host: HostConfig, ssd: SsdConfig) -> Dict[str, float]:
+    """The modeled $/unit rates (normalized units: NAND die == 1,
+    capital == rent) every cost-reporting bench shares — one place, so
+    the admission benchmark and the autoscale benchmark stay
+    comparable: DRAM rent per byte-second, DRAM wire per byte moved,
+    flash IO per `PAGE_BYTES` page, host CPU per IO."""
+    return {
+        "rent_rate": host.alpha_h_dram / host.c_h_dram_die,
+        "dram_wire_rate": host.alpha_h_dram / host.b_h_dram_die,
+        "page_io_cost": ssd.cost / float(iops_ssd_peak(ssd, PAGE_BYTES)),
+        "host_io_cost": host.alpha_core / host.iops_core,
+    }
+
 
 def _policy_for(mode: str, host: HostConfig, ssd: SsdConfig, l_blk: int,
                 alpha_accel: float, sim_cfg):
@@ -138,13 +154,14 @@ def run_scenario(scenario: str, mode: str, *,
     store.flush_deferred_writes()
 
     # ----------------------------------------------------------- cost model
-    rent_rate = host.alpha_h_dram / host.c_h_dram_die      # $/(B*s)
-    dram_wire_rate = host.alpha_h_dram / host.b_h_dram_die  # $/B
-    page_io_cost = ssd.cost / float(iops_ssd_peak(ssd, 4096))
-    host_io_cost = host.alpha_core / host.iops_core
+    rates = pricing_rates(host, ssd)
+    rent_rate = rates["rent_rate"]                         # $/(B*s)
+    dram_wire_rate = rates["dram_wire_rate"]               # $/B
+    page_io_cost = rates["page_io_cost"]
+    host_io_cost = rates["host_io_cost"]
 
     q = store.runtime.qstats
-    flash_pages = -(-q[Tier.FLASH].bytes_moved // 4096)
+    flash_pages = -(-q[Tier.FLASH].bytes_moved // PAGE_BYTES)
     dram_bytes_moved = q[Tier.DRAM].bytes_moved + q[Tier.HBM].bytes_moved
     total_ios = sum(s.submitted for s in q.values())
 

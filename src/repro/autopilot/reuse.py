@@ -114,6 +114,22 @@ class ReuseTracker:
     def last_seen(self, key) -> Optional[float]:
         return self._last_seen.get(key)
 
+    def seed_prior(self, cls: str, interval: float, weight: float = 1.0):
+        """Declared workload prior: add `weight` mass at `interval` to
+        the class sketch directly (no synthetic ghost entries) — how
+        `HierarchySpec.class_priors` pre-loads first-touch admission
+        before any reuse has been measured. Decays away like measured
+        mass, so real telemetry supersedes the declaration."""
+        if interval <= 0:
+            raise ValueError(f"prior interval must be positive seconds "
+                             f"(got {interval!r})")
+        if weight <= 0:
+            raise ValueError("prior weight must be positive")
+        cid = self.class_id(cls)
+        b = int(np.clip(np.floor(np.log2(interval / self.tau0)), 0,
+                        self.n_buckets - 1))
+        self.hist[cid, b] += weight
+
     # ----------------------------------------------------------- estimates
     def bucket_centers(self) -> np.ndarray:
         """Geometric center of each bucket (seconds)."""

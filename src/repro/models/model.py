@@ -438,8 +438,14 @@ def loss_and_aux(params, cfg: ModelConfig, rules: Rules, batch,
 
 def prefill(params, cfg: ModelConfig, rules: Rules, batch, cache,
             compute_dtype=jnp.bfloat16, cost_exact: bool = False,
-            unroll: bool = False):
-    """Fill caches from a prompt. Returns (new_cache, last_logits [B,V])."""
+            unroll: bool = False, last_index=None):
+    """Fill caches from a prompt. Returns (new_cache, last_logits [B,V]).
+
+    `last_index` (traced scalar) selects which position's logits to
+    return instead of the final one — the serving engine right-pads
+    prompts to power-of-two buckets (one compile per bucket instead of
+    one per exact length) and still needs the logits of the last *real*
+    token; causality keeps positions < last_index unaffected by pads."""
     tokens = batch["tokens"]
     x = _embed_tokens(params, cfg, tokens, compute_dtype)
     if cfg.modality == "vlm" and "vision_embeds" in batch:
@@ -458,7 +464,12 @@ def prefill(params, cfg: ModelConfig, rules: Rules, batch, cache,
     x = rules.constrain(x, "batch", None, "res_embed")
     x, new_cache, _ = run_stack(params, x, cfg, ctx, caches=cache,
                                 unroll=unroll)
-    x_last = apply_norm(params["final_norm"], x[:, -1:], cfg.norm,
+    if last_index is None:
+        x_last = x[:, -1:]
+    else:
+        x_last = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(last_index, jnp.int32), 1, axis=1)
+    x_last = apply_norm(params["final_norm"], x_last, cfg.norm,
                         cfg.norm_eps)
     logits = _logits(params, cfg, x_last, ctx)[:, 0]
     return new_cache, logits

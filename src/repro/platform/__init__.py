@@ -1,0 +1,30 @@
+"""Declarative platform API: `HierarchySpec` -> compiled `Platform`.
+
+One validated spec (per-host tier geometry, fabric topology, policy,
+workload priors, clock source) compiles into the whole runtime — clock,
+per-host stores with per-host `EconomicGate`s, the capacity-weighted
+sharded fabric, and an attached `ProvisionAdvisor` whose recommendation
+`Platform.autoscale` turns into `add_host`/`remove_host` actions (the
+closed provisioning loop). Specs round-trip through JSON so benchmarks
+and CI pin byte-identical scenarios.
+
+    from repro.platform import HierarchySpec, HostDecl, PolicyDecl, Platform
+    spec = HierarchySpec(hosts=(HostDecl(count=4),),
+                         policy=PolicyDecl.economic(l_blk=128 << 10))
+    platform = Platform.compile(spec)
+"""
+from .autoscale import (AutoscaleDecision, Autoscaler,  # noqa: F401
+                        default_autoscale_spec, run_autoscale_bench)
+from .compiler import Platform  # noqa: F401
+from .handles import Handle, KvSession  # noqa: F401
+from .roofline_hook import measured_step_time  # noqa: F401
+from .spec import (AutoscaleDecl, HierarchySpec, HostDecl,  # noqa: F401
+                   NetDecl, PolicyDecl, TierDecl, TopologyDecl)
+
+__all__ = [
+    "AutoscaleDecision", "AutoscaleDecl", "Autoscaler",
+    "Handle", "HierarchySpec", "HostDecl", "KvSession", "NetDecl",
+    "Platform", "PolicyDecl", "TierDecl", "TopologyDecl",
+    "default_autoscale_spec", "measured_step_time",
+    "run_autoscale_bench",
+]

@@ -1,0 +1,211 @@
+"""Platform — the compiled runtime behind a `HierarchySpec`.
+
+`Platform.compile(spec)` assembles in one pass what previously took
+five constructor dialects: the injected clock, N per-host `TieredStore`s
+(each with its own tier geometry and its own policy — per-host
+`EconomicGate`s sharing one fleet-wide `ReuseTracker` under the
+economic policy), the sharded fabric with a capacity-weighted
+consistent-hash ring, the NIC/topology service models, and an attached
+`ProvisionAdvisor`. Economics and topology are inputs; nothing is
+plumbing.
+
+The facade hands out uniform capabilities:
+
+    platform = Platform.compile(spec)
+    sess = platform.kv_session("user-42", host=1)
+    sess.save(blob); h = sess.prefetch(); ...; blob = h.result()
+    es = platform.expert_store(n_layers=4, n_experts=8)
+    eng = platform.engine(cfg, params, rules, host=0)
+    advice = platform.advise()
+    platform.autoscale(step)        # closed provisioning loop
+
+`autoscale` lets the advisor *drive* `add_host`/`remove_host` (under
+the spec's rebalance pacer and autoscale bounds) instead of merely
+advising — see `repro.platform.autoscale`.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from ..autopilot.advisor import ProvisionAdvice, ProvisionAdvisor
+from ..autopilot.gate import EconomicGate
+from ..autopilot.reuse import ReuseTracker
+from ..core.policy import TieringPolicy
+from ..runtime.clock import VirtualClock, WallClock
+from ..runtime.fabric import RebalanceStats, ShardedTieredStore
+from ..runtime.service import NetQueueModel, SsdQueueModel
+from .handles import Handle, KvSession
+from .spec import HierarchySpec, PolicyDecl
+
+__all__ = ["Platform", "Handle", "KvSession"]
+
+
+class Platform:
+    """Compiled hierarchy: clock + fabric + policies + advisor, behind
+    capability handles. Construct via `Platform.compile(spec)`."""
+
+    def __init__(self, spec: HierarchySpec, clock, fabric, *,
+                 tracker: Optional[ReuseTracker] = None,
+                 advisor: Optional[ProvisionAdvisor] = None,
+                 step_time: float = 0.0):
+        self.spec = spec
+        self.clock = clock
+        self.fabric = fabric
+        self.tracker = tracker
+        self.advisor = advisor
+        self.step_time = step_time
+        self._autoscaler = None
+
+    # ------------------------------------------------------------- compile
+    @classmethod
+    def compile(cls, spec: HierarchySpec, *, sim_cfg=None) -> "Platform":
+        """Validate `spec` and assemble the runtime. `sim_cfg` (a
+        `repro.ssdsim.SimConfig`) overrides the flash calibration for
+        every host — programmatic only, like a policy factory."""
+        spec.validate()
+        clock = VirtualClock(spec.t0) if spec.clock == "virtual" \
+            else WallClock()
+
+        tracker: Optional[ReuseTracker] = None
+        advisor: Optional[ProvisionAdvisor] = None
+        decl = spec.policy
+        if callable(decl) and not isinstance(decl, PolicyDecl):
+            factory = decl
+        elif decl.kind == "static":
+            def factory(_h, _d=decl):
+                return TieringPolicy(tau_hot=_d.tau_hot, tau_be=_d.tau_be,
+                                     hysteresis=_d.hysteresis,
+                                     ema_alpha=_d.ema_alpha)
+        else:
+            host_cfg, ssd = decl.economics()
+            # one fleet-wide tracker: every host's gate feeds it, the
+            # advisor reads the whole workload's reuse histograms
+            tracker = ReuseTracker()
+            for cls_name, interval in sorted(spec.class_priors.items()):
+                tracker.seed_prior(cls_name, interval)
+            fetch_seconds = 0.0
+            if decl.alpha_stall:
+                # price the miss the way the cost model does: the
+                # modeled demand-fetch time at depth 1
+                fetch_seconds = SsdQueueModel.shared(sim_cfg).service(
+                    decl.l_blk, 1).total
+
+            def factory(_h, _d=decl, _t=tracker, _f=fetch_seconds,
+                        _host=host_cfg, _ssd=ssd):
+                return EconomicGate.from_break_even(
+                    _host, _ssd, _d.l_blk, gamma_rw=_d.gamma_rw,
+                    phi_wa=_d.phi_wa, alpha_stall=_d.alpha_stall,
+                    fetch_seconds=_f, tracker=_t,
+                    prior_quantile=_d.prior_quantile)
+
+        topology = spec.topology.compile() if spec.topology is not None \
+            else None
+        net_model = None
+        if spec.net is not None:
+            net_model = NetQueueModel(rtt=spec.net.rtt,
+                                      bandwidth=spec.net.bandwidth,
+                                      sat_depth=spec.net.sat_depth,
+                                      topology=topology)
+            topology = None         # attached to the model, per fabric rule
+
+        hosts = spec.expanded_hosts()
+        fabric = ShardedTieredStore(
+            host_specs=[h.tier_specs() for h in hosts],
+            weights=spec.resolved_weights(),
+            policy_factory=factory, clock=clock, sim_cfg=sim_cfg,
+            net_model=net_model, topology=topology,
+            write_shield_depth=spec.write_shield_depth,
+            vnodes=spec.vnodes, rebalance_rate=spec.rebalance_rate)
+
+        if tracker is not None:
+            template = spec.hosts[spec.autoscale.template]
+            advisor = ProvisionAdvisor(
+                host_cfg, ssd, decl.l_blk, gamma_rw=decl.gamma_rw,
+                phi_wa=decl.phi_wa,
+                dram_bytes_per_host=template.dram_capacity(),
+                active_window=spec.autoscale.active_window)
+
+        return cls(spec, clock, fabric, tracker=tracker, advisor=advisor,
+                   step_time=spec.resolved_step_time())
+
+    # -------------------------------------------------------- capabilities
+    @property
+    def n_hosts(self) -> int:
+        return self.fabric.n_hosts
+
+    def policy(self, host: int = 0) -> TieringPolicy:
+        return self.fabric.hosts[host].policy
+
+    def kv_session(self, rid: str, *, host: int = 0,
+                   replicas: Optional[int] = None) -> KvSession:
+        """Session-state capability (save/prefetch/resume one KV blob)."""
+        return KvSession(self.fabric, rid, host,
+                         replicas=replicas if replicas is not None
+                         else self.spec.replicas)
+
+    def expert_store(self, n_layers: int, n_experts: int, *,
+                     host: int = 0, replicas: Optional[int] = None,
+                     expert_bytes: float = 0.0):
+        """MoE expert streaming over the fabric from `host`'s view."""
+        from ..tiering.expert_store import ExpertStore
+        r = replicas if replicas is not None else self.spec.replicas
+        return ExpertStore(
+            n_layers, n_experts, policy=self.policy(host),
+            store=self.fabric.host_view(host, replicas=r),
+            expert_bytes=expert_bytes)
+
+    def engine(self, cfg, params, rules, *, host: int = 0,
+               step_time: Optional[float] = None, **kw):
+        """Decode engine on `host`'s fabric view, stepping the shared
+        clock by the spec's (possibly roofline-measured) step time."""
+        from ..serving.engine import DecodeEngine
+        return DecodeEngine(
+            cfg, params, rules, policy=self.policy(host),
+            store=self.fabric.host_view(host),
+            step_time=self.step_time if step_time is None else step_time,
+            **kw)
+
+    # ---------------------------------------------------------- provision
+    def advise(self, horizon: Optional[float] = None) -> ProvisionAdvice:
+        """Live provisioning guidance from the fleet's measured state."""
+        if self.advisor is None or self.tracker is None:
+            raise ValueError(
+                "platform has no advisor: provisioning guidance needs "
+                "the economic policy (PolicyDecl(kind='economic')); "
+                "static/factory policies track no reuse telemetry")
+        return self.advisor.advise(self.tracker, fabric=self.fabric,
+                                   horizon=horizon)
+
+    def add_host(self) -> RebalanceStats:
+        """Join a template host (spec.autoscale.template) and rebalance
+        under the spec's pacer."""
+        spec = self.spec
+        template = spec.hosts[spec.autoscale.template]
+        weights = spec.resolved_weights()
+        first = sum(h.count for h in
+                    spec.hosts[:spec.autoscale.template])
+        return self.fabric.add_host(specs=template.tier_specs(),
+                                    weight=weights[first])
+
+    def autoscale(self, step: Optional[int] = None):
+        """One closed-loop provisioning step: the advisor's host-count
+        recommendation drives `add_host`/`remove_host` under the spec's
+        bounds, cooldown and rebalance pacer. Returns the
+        `AutoscaleDecision` (action taken, advice, rebalance stats)."""
+        if self._autoscaler is None:
+            from .autoscale import Autoscaler
+            self._autoscaler = Autoscaler(self)
+        return self._autoscaler.step(step)
+
+    # ------------------------------------------------------------- control
+    def drain(self) -> float:
+        return self.fabric.drain()
+
+    def reset_stats(self):
+        self.fabric.reset_stats()
+
+    def summary(self) -> Dict[str, float]:
+        return self.fabric.summary()
+
+    def report(self) -> str:
+        return self.fabric.report()

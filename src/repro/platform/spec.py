@@ -1,0 +1,455 @@
+"""HierarchySpec — the declarative front door to the tiering runtime.
+
+The paper's thesis is that tiering should fall out of a *declared*
+cost/feasibility model, not hand-wired mechanism. After the runtime grew
+a fabric, an autopilot and an advisor, standing up a full system still
+meant threading a `VirtualClock` through five constructor dialects
+(`TieredStore`, `ShardedTieredStore`, `DecodeEngine`, `ExpertStore`,
+`EconomicGate`). This module replaces that with one validated spec in
+the spec-then-compile style of disaggregated buffer managers:
+
+    spec = HierarchySpec(
+        hosts=[HostDecl(dram_gib=256), HostDecl(dram_gib=128, count=3)],
+        policy=PolicyDecl.economic(l_blk=128 << 10),
+        topology=TopologyDecl(hosts_per_rack=2),
+        step_time="measured",            # roofline hook, modeled fallback
+    )
+    platform = Platform.compile(spec)    # repro.platform.compiler
+
+Everything in a spec is data: `to_json()`/`from_json()` round-trip
+byte-exactly, so benchmarks and CI pin scenario specs instead of
+constructor call sites. The one escape hatch — `policy` may be a
+callable `host_id -> TieringPolicy` factory — is rejected by
+`to_json()` with an actionable error, because a factory is code, not a
+declaration.
+
+Heterogeneous hosts: each `HostDecl` may carry its own tier geometry
+(capacity/bandwidth skew) and the compiled fabric places ring weight
+proportional to DRAM capacity (`weighting="capacity"`, the default) so
+a host with 2x the DRAM owns ~2x the keys. `weighting="uniform"`
+keeps the unweighted ring (the pre-heterogeneity behavior, useful as a
+control arm); explicit `weights=[...]` overrides both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Dict, List, Optional, Tuple, Union
+
+from ..core.economics import CPU_DDR, GPU_GDDR, HostConfig
+from ..core.policy import Tier, TieringPolicy
+from ..core.ssd_model import NAND_TYPES, SsdConfig, storage_next_ssd
+from ..runtime.tiers import TierSpec
+
+SPEC_VERSION = 1
+
+_TIER_NAMES = {"hbm": Tier.HBM, "dram": Tier.DRAM, "flash": Tier.FLASH}
+_HOST_PROFILES: Dict[str, HostConfig] = {"cpu": CPU_DDR, "gpu": GPU_GDDR}
+
+# the TieredStore defaults (v5e-host-like HBM/DRAM + Storage-Next SSD);
+# a HostDecl that omits a tier inherits the matching row
+_DEFAULT_TIERS: Dict[str, Tuple[float, float, float]] = {
+    "hbm": (16e9, 819e9, 1e-7),
+    "dram": (128e9, 45e9, 5e-7),
+    "flash": (4e12, 7e9, 2e-5),
+}
+
+
+def _err(path: str, msg: str) -> ValueError:
+    return ValueError(f"HierarchySpec.{path}: {msg}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TierDecl:
+    """One tier's geometry on one host."""
+    capacity_bytes: float
+    read_bw: float
+    read_latency: float
+
+    def validate(self, path: str):
+        if not self.capacity_bytes > 0:
+            raise _err(path, f"capacity_bytes must be > 0 (got "
+                             f"{self.capacity_bytes!r}); a zero-capacity "
+                             f"tier can never hold an object")
+        if not self.read_bw > 0:
+            raise _err(path, f"read_bw must be > 0 B/s (got "
+                             f"{self.read_bw!r})")
+        if self.read_latency < 0:
+            raise _err(path, f"read_latency must be >= 0 s (got "
+                             f"{self.read_latency!r})")
+
+
+@dataclasses.dataclass(frozen=True)
+class HostDecl:
+    """One host class: its tier geometry, ring weight and multiplicity.
+
+    `tiers` maps "hbm"/"dram"/"flash" to a `TierDecl`; omitted tiers
+    inherit the runtime defaults. `count` expands the declaration into
+    that many identical hosts. `weight` overrides the capacity-derived
+    ring weight for these hosts."""
+    tiers: Dict[str, TierDecl] = dataclasses.field(default_factory=dict)
+    weight: Optional[float] = None
+    count: int = 1
+
+    def validate(self, path: str):
+        if self.count < 1:
+            raise _err(path, f"count must be >= 1 (got {self.count})")
+        if self.weight is not None and not self.weight > 0:
+            raise _err(path, f"weight must be > 0 (got {self.weight!r})")
+        for name, tier in self.tiers.items():
+            if name not in _TIER_NAMES:
+                raise _err(f"{path}.tiers", f"unknown tier {name!r}; one "
+                           f"of {sorted(_TIER_NAMES)}")
+            tier.validate(f"{path}.tiers[{name!r}]")
+
+    def dram_capacity(self) -> float:
+        decl = self.tiers.get("dram")
+        return decl.capacity_bytes if decl is not None \
+            else _DEFAULT_TIERS["dram"][0]
+
+    def tier_specs(self) -> Optional[Dict[Tier, TierSpec]]:
+        """Compiled per-host TierSpec dict; None when fully default."""
+        if not self.tiers:
+            return None
+        out: Dict[Tier, TierSpec] = {}
+        for name, (cap, bw, lat) in _DEFAULT_TIERS.items():
+            decl = self.tiers.get(name)
+            if decl is not None:
+                cap, bw, lat = (decl.capacity_bytes, decl.read_bw,
+                                decl.read_latency)
+            out[_TIER_NAMES[name]] = TierSpec(cap, bw, lat)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyDecl:
+    """Declarative placement policy.
+
+    kind="static": a plain `TieringPolicy` with pinned thresholds on
+    every host. kind="economic": a per-host `EconomicGate` priced from
+    the calibrated break-even economics (`host_profile` x `nand` x
+    `l_blk`), all gates sharing one fleet-wide `ReuseTracker` so the
+    advisor sees the whole workload."""
+    kind: str = "economic"
+    # static thresholds
+    tau_hot: Optional[float] = None
+    tau_be: Optional[float] = None
+    ema_alpha: float = 0.2
+    hysteresis: float = 0.25
+    # economic calibration
+    host_profile: str = "gpu"
+    nand: str = "slc"
+    l_blk: int = 128 << 10
+    alpha_stall: float = 0.0
+    gamma_rw: float = 9.0
+    phi_wa: float = 3.0
+    prior_quantile: float = 0.5
+
+    KINDS = ("economic", "static")
+
+    def validate(self, path: str = "policy"):
+        if self.kind not in self.KINDS:
+            raise _err(path, f"unknown policy kind {self.kind!r}; one of "
+                             f"{self.KINDS} (or pass a callable "
+                             f"host_id -> TieringPolicy factory)")
+        if self.kind == "static":
+            if self.tau_hot is None or self.tau_be is None:
+                raise _err(path, "static policy needs explicit tau_hot "
+                                 "and tau_be thresholds")
+            if self.tau_hot > self.tau_be:
+                raise _err(path, f"tau_hot={self.tau_hot} must be <= "
+                                 f"tau_be={self.tau_be}")
+        else:
+            if self.host_profile not in _HOST_PROFILES:
+                raise _err(path, f"unknown host_profile "
+                           f"{self.host_profile!r}; one of "
+                           f"{sorted(_HOST_PROFILES)}")
+            if self.nand not in NAND_TYPES:
+                raise _err(path, f"unknown nand {self.nand!r}; one of "
+                           f"{sorted(NAND_TYPES)}")
+            if self.l_blk < 1:
+                raise _err(path, f"l_blk must be >= 1 byte "
+                                 f"(got {self.l_blk})")
+
+    # ------------------------------------------------------- constructors
+    @classmethod
+    def static(cls, tau_hot: float, tau_be: float, **kw) -> "PolicyDecl":
+        return cls(kind="static", tau_hot=tau_hot, tau_be=tau_be, **kw)
+
+    @classmethod
+    def pinned_flash(cls) -> "PolicyDecl":
+        """Everything stays on flash — the restore-path benchmark policy."""
+        return cls.static(tau_hot=1e-12, tau_be=1e-9, ema_alpha=1.0)
+
+    @classmethod
+    def pinned_dram(cls) -> "PolicyDecl":
+        """Everything wants DRAM; only capacity pressure demotes."""
+        return cls.static(tau_hot=1e-12, tau_be=1e12)
+
+    @classmethod
+    def economic(cls, **kw) -> "PolicyDecl":
+        return cls(kind="economic", **kw)
+
+    # ----------------------------------------------------------- compile
+    def economics(self) -> Tuple[HostConfig, SsdConfig]:
+        return (_HOST_PROFILES[self.host_profile],
+                storage_next_ssd(NAND_TYPES[self.nand]))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyDecl:
+    """Rack/spine descriptor, compiled to `runtime.service.FabricTopology`."""
+    hosts_per_rack: int = 4
+    rack_rtt: float = 15e-6
+    spine_rtt: float = 40e-6
+    rack_bandwidth: float = 12.5e9
+    spine_bandwidth: float = 6.25e9
+    incast_degree: int = 2
+
+    def validate(self, path: str = "topology"):
+        try:
+            self.compile()
+        except ValueError as e:
+            raise _err(path, str(e)) from e
+
+    def compile(self):
+        from ..runtime.service import FabricTopology
+        return FabricTopology(**dataclasses.asdict(self))
+
+
+@dataclasses.dataclass(frozen=True)
+class NetDecl:
+    """Uniform NIC-link parameters (`runtime.service.NetQueueModel`)."""
+    rtt: float = 25e-6
+    bandwidth: float = 12.5e9
+    sat_depth: int = 4
+
+    def validate(self, path: str = "net"):
+        if self.rtt < 0 or self.bandwidth <= 0 or self.sat_depth < 1:
+            raise _err(path, f"invalid NIC parameters "
+                             f"{dataclasses.asdict(self)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscaleDecl:
+    """Closed provisioning loop: bounds and pacing for
+    `Platform.autoscale` (advisor-driven `add_host`/`remove_host`)."""
+    min_hosts: int = 1
+    max_hosts: int = 8
+    cooldown_steps: int = 8
+    template: int = 0           # index into spec.hosts for new hosts
+    active_window: Optional[float] = None   # advisor hot-set staleness (s)
+
+    def validate(self, path: str = "autoscale"):
+        if self.min_hosts < 1:
+            raise _err(path, f"min_hosts must be >= 1 (got "
+                             f"{self.min_hosts})")
+        if self.max_hosts < self.min_hosts:
+            raise _err(path, f"max_hosts={self.max_hosts} < "
+                             f"min_hosts={self.min_hosts}")
+        if self.cooldown_steps < 0:
+            raise _err(path, "cooldown_steps must be >= 0")
+        if self.active_window is not None and self.active_window <= 0:
+            raise _err(path, "active_window must be positive seconds")
+
+
+PolicyLike = Union[PolicyDecl, Callable[[int], TieringPolicy]]
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchySpec:
+    """The whole platform, declared: hosts (possibly heterogeneous),
+    fabric topology, policy, workload priors and clock source. Compile
+    with `repro.platform.Platform.compile`."""
+    hosts: Tuple[HostDecl, ...] = (HostDecl(),)
+    policy: PolicyLike = PolicyDecl()
+    weighting: str = "capacity"             # capacity | uniform
+    weights: Optional[Tuple[float, ...]] = None
+    topology: Optional[TopologyDecl] = None
+    net: Optional[NetDecl] = None
+    clock: str = "virtual"                  # virtual | wall
+    t0: float = 0.0
+    step_time: Union[float, str] = 0.0      # seconds | "measured"
+    step_time_fallback: float = 2e-3
+    roofline_arch: Optional[str] = None
+    roofline_shape: str = "decode_32k"
+    roofline_results: Optional[str] = None  # results dir override
+    class_priors: Dict[str, float] = dataclasses.field(
+        default_factory=dict)               # class -> assumed interval (s)
+    replicas: int = 1
+    vnodes: int = 64
+    write_shield_depth: Optional[int] = None
+    rebalance_rate: Optional[float] = None
+    autoscale: AutoscaleDecl = AutoscaleDecl()
+
+    def __post_init__(self):
+        # normalize list inputs (JSON round-trip hands us lists)
+        if isinstance(self.hosts, list):
+            object.__setattr__(self, "hosts", tuple(self.hosts))
+        if isinstance(self.weights, list):
+            object.__setattr__(self, "weights", tuple(self.weights))
+
+    # ----------------------------------------------------------- validate
+    def validate(self) -> "HierarchySpec":
+        if not self.hosts:
+            raise _err("hosts", "need at least one host declaration")
+        for i, h in enumerate(self.hosts):
+            if not isinstance(h, HostDecl):
+                raise _err(f"hosts[{i}]", f"expected HostDecl, got "
+                                          f"{type(h).__name__}")
+            h.validate(f"hosts[{i}]")
+        if callable(self.policy):
+            pass                        # programmatic factory, trusted
+        elif isinstance(self.policy, PolicyDecl):
+            self.policy.validate()
+        else:
+            raise _err("policy", f"expected PolicyDecl or a callable "
+                       f"host_id -> TieringPolicy factory, got "
+                       f"{type(self.policy).__name__}")
+        if self.weighting not in ("capacity", "uniform"):
+            raise _err("weighting", f"unknown weighting "
+                       f"{self.weighting!r}; one of ('capacity', "
+                       f"'uniform')")
+        if self.weights is not None:
+            if len(self.weights) != self.n_hosts:
+                raise _err("weights", f"{len(self.weights)} ring weights "
+                           f"for {self.n_hosts} hosts; lengths must "
+                           f"match")
+            if any(not w > 0 for w in self.weights):
+                raise _err("weights", "ring weights must be positive")
+        if self.topology is not None:
+            self.topology.validate()
+        if self.net is not None:
+            self.net.validate()
+        if self.clock not in ("virtual", "wall"):
+            raise _err("clock", f"unknown clock source {self.clock!r}; "
+                       f"one of ('virtual', 'wall')")
+        if isinstance(self.step_time, str):
+            if self.step_time != "measured":
+                raise _err("step_time", f"expected seconds or "
+                           f"'measured', got {self.step_time!r}")
+        elif self.step_time < 0:
+            raise _err("step_time", "step_time must be >= 0 seconds")
+        if self.step_time_fallback < 0:
+            raise _err("step_time_fallback", "must be >= 0 seconds")
+        for cls, iv in self.class_priors.items():
+            if not iv > 0:
+                raise _err(f"class_priors[{cls!r}]",
+                           f"prior interval must be positive seconds "
+                           f"(got {iv!r})")
+        if self.replicas < 1:
+            raise _err("replicas", f"must be >= 1 (got {self.replicas})")
+        if self.vnodes < 1:
+            raise _err("vnodes", f"must be >= 1 (got {self.vnodes})")
+        if self.write_shield_depth is not None \
+                and self.write_shield_depth < 1:
+            raise _err("write_shield_depth", "must be >= 1 (a zero "
+                       "threshold would shield forever)")
+        if self.rebalance_rate is not None and self.rebalance_rate <= 0:
+            raise _err("rebalance_rate", "must be positive bytes/s")
+        self.autoscale.validate()
+        if not 0 <= self.autoscale.template < len(self.hosts):
+            raise _err("autoscale.template", f"host index "
+                       f"{self.autoscale.template} out of range for "
+                       f"{len(self.hosts)} host declaration(s)")
+        return self
+
+    # ------------------------------------------------------------ derived
+    @property
+    def n_hosts(self) -> int:
+        return sum(h.count for h in self.hosts)
+
+    def expanded_hosts(self) -> List[HostDecl]:
+        """One entry per physical host (counts unrolled)."""
+        out: List[HostDecl] = []
+        for h in self.hosts:
+            out.extend([h] * h.count)
+        return out
+
+    def resolved_weights(self) -> List[float]:
+        """Ring weight per physical host: explicit `weights` list, else
+        per-host `weight` overrides on top of the weighting mode
+        (capacity: DRAM capacity normalized so the smallest host is 1.0
+        — homogeneous fleets reproduce the unweighted ring exactly;
+        uniform: all 1.0)."""
+        hosts = self.expanded_hosts()
+        if self.weights is not None:
+            return [float(w) for w in self.weights]
+        if self.weighting == "uniform":
+            base = [1.0] * len(hosts)
+        else:
+            caps = [h.dram_capacity() for h in hosts]
+            lo = min(caps)
+            base = [c / lo for c in caps]
+        return [h.weight if h.weight is not None else w
+                for h, w in zip(hosts, base)]
+
+    def resolved_step_time(self) -> float:
+        """Seconds of modeled decode compute per step; `"measured"`
+        resolves through the roofline hook (falling back to
+        `step_time_fallback` off-hardware)."""
+        if self.step_time == "measured":
+            from .roofline_hook import measured_step_time
+            t = measured_step_time(arch=self.roofline_arch,
+                                   shape=self.roofline_shape,
+                                   results_dir=self.roofline_results)
+            return float(t) if t is not None else self.step_time_fallback
+        return float(self.step_time)
+
+    # --------------------------------------------------------------- json
+    def to_json(self, indent: Optional[int] = None) -> str:
+        """Serialize; byte-stable (sorted keys) so CI can pin specs.
+        Raises for a callable policy — a factory is code, not data."""
+        if callable(self.policy) and not isinstance(self.policy,
+                                                    PolicyDecl):
+            raise ValueError(
+                "HierarchySpec.policy is a callable factory and cannot "
+                "be serialized; declare it as a PolicyDecl (kind="
+                "'economic' or 'static') to make the spec round-trip")
+        d = dataclasses.asdict(self)
+        d["version"] = SPEC_VERSION
+        return json.dumps(d, sort_keys=True, indent=indent)
+
+    @classmethod
+    def from_json(cls, blob: str) -> "HierarchySpec":
+        """Parse + validate; `from_json(to_json(spec)) == spec`."""
+        try:
+            d = json.loads(blob)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"HierarchySpec JSON is not valid JSON: "
+                             f"{e}") from e
+        if not isinstance(d, dict):
+            raise ValueError("HierarchySpec JSON must be an object")
+        version = d.pop("version", SPEC_VERSION)
+        if version != SPEC_VERSION:
+            raise ValueError(f"HierarchySpec version {version} not "
+                             f"supported (this build reads "
+                             f"{SPEC_VERSION})")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(f"HierarchySpec JSON has unknown fields "
+                             f"{unknown}; known fields are "
+                             f"{sorted(known)}")
+        hosts = tuple(
+            HostDecl(tiers={name: TierDecl(**t)
+                            for name, t in h.get("tiers", {}).items()},
+                     weight=h.get("weight"), count=h.get("count", 1))
+            for h in d.pop("hosts", [{}]))
+        policy = d.pop("policy", None)
+        policy = PolicyDecl(**policy) if policy is not None \
+            else PolicyDecl()
+        topology = d.pop("topology", None)
+        topology = TopologyDecl(**topology) if topology is not None \
+            else None
+        net = d.pop("net", None)
+        net = NetDecl(**net) if net is not None else None
+        autoscale = d.pop("autoscale", None)
+        autoscale = AutoscaleDecl(**autoscale) if autoscale is not None \
+            else AutoscaleDecl()
+        weights = d.pop("weights", None)
+        spec = cls(hosts=hosts, policy=policy, topology=topology,
+                   net=net, autoscale=autoscale,
+                   weights=tuple(weights) if weights is not None
+                   else None, **d)
+        return spec.validate()

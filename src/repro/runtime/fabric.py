@@ -70,6 +70,17 @@ local read and spreads hot replicated keys across their holders.
 `prefetch_lead_steps` sizes the prefetch lead from the owner flash
 tier's calibrated open-loop p99 (plus the NIC leg for remote fetches)
 instead of a fixed step count.
+
+Heterogeneous hosts: pass `host_specs=[{Tier: TierSpec, ...}, ...]`
+(one entry per host; None entries take the shared default) and
+`weights=[...]` and each host gets its own tier capacities/bandwidths
+while the consistent-hash ring places `round(vnodes * weight)` virtual
+nodes per host — a host with twice the capacity weight owns ~twice the
+keys. Equal weights reproduce the unweighted ring bit-for-bit (the same
+`host{h}/vn{v}` points), so homogeneous fleets are unchanged.
+`add_host(specs=, weight=)` extends an elastic fleet with a
+non-template host. The declarative front door for all of this is
+`repro.platform.HierarchySpec` -> `Platform.compile`.
 """
 from __future__ import annotations
 
@@ -211,15 +222,31 @@ class ShardedTieredStore:
     """Consistent-hash-sharded multi-host TieredStore on one clock,
     elastic under host join/leave."""
 
-    def __init__(self, n_hosts: int, *, policy_factory=None,
+    def __init__(self, n_hosts: Optional[int] = None, *,
+                 policy_factory=None,
                  specs: Optional[Dict[Tier, TierSpec]] = None,
+                 host_specs: Optional[
+                     List[Optional[Dict[Tier, TierSpec]]]] = None,
+                 weights: Optional[List[float]] = None,
                  clock=None, sim_cfg=None,
                  net_model: Optional[NetQueueModel] = None,
                  write_shield_depth: Optional[int] = None,
                  vnodes: int = 64, topology=None,
                  rebalance_rate: Optional[float] = None):
-        if n_hosts < 1:
+        if host_specs is not None:
+            if n_hosts is not None and n_hosts != len(host_specs):
+                raise ValueError(
+                    f"n_hosts={n_hosts} but {len(host_specs)} host_specs "
+                    f"given; pass one or make them agree")
+            n_hosts = len(host_specs)
+        if n_hosts is None or n_hosts < 1:
             raise ValueError("need at least one host")
+        if weights is not None:
+            if len(weights) != n_hosts:
+                raise ValueError(
+                    f"{len(weights)} ring weights for {n_hosts} hosts")
+            if any(w <= 0 for w in weights):
+                raise ValueError("ring weights must be positive")
         if rebalance_rate is not None and rebalance_rate <= 0:
             raise ValueError("rebalance_rate must be positive bytes/s")
         self.clock = ensure_clock(clock)
@@ -247,8 +274,14 @@ class ShardedTieredStore:
         self.nic: Dict[int, AsyncTierRuntime] = {}
         self.host_ids: List[int] = []
         self._next_host = 0
-        for _ in range(n_hosts):
-            self._new_host()
+        # per-host tier specs and ring weight (heterogeneous fleets);
+        # a None spec entry means "the shared default"
+        self._host_specs: Dict[int, Optional[Dict[Tier, TierSpec]]] = {}
+        self._weights: Dict[int, float] = {}
+        for i in range(n_hosts):
+            self._new_host(
+                specs=host_specs[i] if host_specs is not None else None,
+                weight=weights[i] if weights is not None else 1.0)
         self._rebuild_ring()
         # in-flight NIC flows (transfer, src, dst) — destination fan-in
         # for the topology model's incast penalty
@@ -270,12 +303,18 @@ class ShardedTieredStore:
         return len(self.host_ids)
 
     # ------------------------------------------------------------- topology
-    def _new_host(self) -> int:
+    def _new_host(self, specs: Optional[Dict[Tier, TierSpec]] = None,
+                  weight: float = 1.0) -> int:
+        if weight <= 0:
+            raise ValueError("ring weight must be positive")
         h = self._next_host
         self._next_host += 1
+        self._host_specs[h] = specs
+        self._weights[h] = float(weight)
         self.hosts[h] = TieredStore(
-            self._policy_factory(h), specs=self._specs, clock=self.clock,
-            sim_cfg=self._sim_cfg,
+            self._policy_factory(h),
+            specs=specs if specs is not None else self._specs,
+            clock=self.clock, sim_cfg=self._sim_cfg,
             write_shield_depth=self._write_shield_depth)
         self.nic[h] = AsyncTierRuntime(
             clock=self.clock, service_models={NIC: self.net_model})
@@ -283,11 +322,14 @@ class ShardedTieredStore:
         return h
 
     def _rebuild_ring(self):
-        # consistent-hash ring: `vnodes` points per host keep the key
-        # split even and make host count changes remap only ~1/N of keys
+        # consistent-hash ring: `round(vnodes * weight)` points per host
+        # keep the key split proportional to capacity weight (uniform
+        # weights: exactly `vnodes` each — the unweighted ring bit-for-
+        # bit) and make host count changes remap only ~weight/total keys
         points: List[Tuple[int, int]] = []
         for h in self.host_ids:
-            for v in range(self.vnodes):
+            n_pts = max(1, int(round(self.vnodes * self._weights[h])))
+            for v in range(n_pts):
                 points.append((_key_digest(f"host{h}/vn{v}".encode()), h))
         points.sort()
         self._ring_points = [p for p, _ in points]
@@ -476,13 +518,16 @@ class ShardedTieredStore:
             step_time)
 
     # ---------------------------------------------------------- elasticity
-    def add_host(self) -> RebalanceStats:
+    def add_host(self, specs: Optional[Dict[Tier, TierSpec]] = None,
+                 weight: float = 1.0) -> RebalanceStats:
         """Join a new host: recompute the ring and stream only the
-        remapped ~1/(N+1) of resident keys to it as background rebalance
-        transfers (source flash read -> source egress NIC -> destination
-        placement, the write subject to the destination's write shield).
-        Serving continues; it queues behind the rebalance traffic."""
-        h = self._new_host()
+        remapped ~weight/total of resident keys to it as background
+        rebalance transfers (source flash read -> source egress NIC ->
+        destination placement, the write subject to the destination's
+        write shield). Serving continues; it queues behind the rebalance
+        traffic. `specs`/`weight` admit a non-template host into a
+        heterogeneous fleet (defaults: the shared tier specs, weight 1)."""
+        h = self._new_host(specs=specs, weight=weight)
         self._rebuild_ring()
         return self._rebalance("join", h)
 

@@ -133,7 +133,7 @@ def _pinned_flash_policy(_host: int) -> TieringPolicy:
 
 
 def multi_host_session_bench(mode: str = "async", *,
-                             n_hosts: int = 4,
+                             n_hosts: Optional[int] = None,
                              n_sessions: int = 16,
                              rounds: int = 2,
                              kv_bytes: int = 1 << 20,
@@ -147,7 +147,9 @@ def multi_host_session_bench(mode: str = "async", *,
                              topology=None,
                              locality: bool = False,
                              churn: Optional[Dict[str, int]] = None,
-                             rebalance_rate: Optional[float] = None
+                             rebalance_rate: Optional[float] = None,
+                             spec=None,
+                             kv_tier: Tier = Tier.FLASH
                              ) -> Dict[str, float]:
     """Fleet serving on the sharded fabric's shared virtual clock.
 
@@ -169,18 +171,44 @@ def multi_host_session_bench(mode: str = "async", *,
     the rebalance tallies land in the returned record.
     `rebalance_rate` caps those streams per source host (bytes/s token
     bucket) so the tax stays bounded under short leads.
+
+    Declarative mode: pass `spec=` (a `repro.platform.HierarchySpec`)
+    and the fleet — per-host tier geometry, ring weights, policy, NIC,
+    clock — is compiled from it instead of the keyword dialect (the
+    fabric-shape kwargs must then stay at their defaults). A
+    homogeneous pinned-flash spec reproduces the keyword path
+    byte-for-byte. `kv_tier` is the pause/landing ask (FLASH measures
+    the restore path; DRAM exercises capacity placement, where a
+    capacity-weighted ring keeps big-DRAM hosts loaded proportionally).
     """
     assert mode in ("sync", "async"), mode
-    clock = VirtualClock()
-    fabric = ShardedTieredStore(
-        n_hosts, policy_factory=_pinned_flash_policy, clock=clock,
-        sim_cfg=sim_cfg, net_model=net_model,
-        write_shield_depth=write_shield_depth, topology=topology,
-        rebalance_rate=rebalance_rate)
+    if spec is not None:
+        conflicts = [name for name, v in [
+            ("n_hosts", n_hosts), ("sim_cfg", sim_cfg),
+            ("net_model", net_model),
+            ("write_shield_depth", write_shield_depth),
+            ("topology", topology), ("rebalance_rate", rebalance_rate)]
+            if v is not None]
+        if conflicts:
+            raise ValueError(
+                f"spec= already declares the fleet; drop the keyword(s) "
+                f"{conflicts} or fold them into the spec")
+        from ..platform.compiler import Platform
+        platform = Platform.compile(spec)
+        clock, fabric = platform.clock, platform.fabric
+        n_hosts = fabric.n_hosts
+    else:
+        n_hosts = 4 if n_hosts is None else n_hosts
+        clock = VirtualClock()
+        fabric = ShardedTieredStore(
+            n_hosts, policy_factory=_pinned_flash_policy, clock=clock,
+            sim_cfg=sim_cfg, net_model=net_model,
+            write_shield_depth=write_shield_depth, topology=topology,
+            rebalance_rate=rebalance_rate)
     blob = np.zeros(max(kv_bytes // 4, 1), np.float32)
     keys = [("kv", f"s{i}") for i in range(n_sessions)]
     for i, k in enumerate(keys):
-        fabric.put(k, blob, tier=Tier.FLASH, from_host=i % n_hosts)
+        fabric.put(k, blob, tier=kv_tier, from_host=i % n_hosts)
     fabric.drain()                      # start from quiesced queues
     fabric.reset_stats()                # measured phase only, not setup
     resident_before = fabric.resident_bytes()
@@ -257,7 +285,7 @@ def multi_host_session_bench(mode: str = "async", *,
             clock.advance(step_time)
         tokens += decode_steps
         # --- pause (KV streams back to the owner shard) -------------------
-        fabric.put(key, blob, tier=Tier.FLASH, from_host=host)
+        fabric.put(key, blob, tier=kv_tier, from_host=host)
 
     s = fabric.summary()
     out = {

@@ -25,19 +25,33 @@ the runtime's `QueueStats`; `kv_stall_time` totals the decode-visible
 stalls. The clock is injectable (deterministic `VirtualClock` default —
 see `repro.runtime.clock` for the testing contract).
 
-Multi-host mode (sharded fabric): construct with `fabric=` (a
-`repro.runtime.fabric.ShardedTieredStore`) and `host=` and the engine's
-store becomes that host's fabric view — KV blocks shard to their
+Multi-host mode (sharded fabric): pass `store=fabric.host_view(host)`
+(what `repro.platform.Platform.engine` does) and the engine's store
+becomes that host's fabric view — KV blocks shard to their
 consistent-hash owner host, and a session paused on one host can resume
 on another: `export_session`/`import_session` hand the (tiny) session
 metadata between engines while the KV block itself streams cross-host
 through the fabric's NIC + remote-flash composition, behind decode when
-`prefetch` is issued with enough lead.
+`prefetch` is issued with enough lead. The old `fabric=`/`host=`
+constructor dialect still works as a thin deprecated shim.
+
+Compile behavior (the splice-jit cache): slot splices — admitting a
+prefilled prompt into a slot, restoring a resumed session's KV block —
+run through module-level jitted functions whose slot index is a
+*traced* scalar, so one compiled program serves every slot of every
+engine with the same cache geometry (cross-host resumes stop re-jitting
+per slot). Prompt lengths are right-padded to power-of-two buckets
+(when every cached sublayer is attention — recurrent states would
+advance through pad garbage), so prefill compiles once per bucket
+instead of once per exact length; causal masking keeps real positions
+unaffected and `prefill(last_index=...)` returns the last *real*
+token's logits. `splice_trace_counts()` exposes the retrace counters.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -59,6 +73,56 @@ class Request:
     slot: Optional[int] = None
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Splice-jit cache: traced-slot splice programs shared by every engine
+# with the same cache geometry. The counters increment only while jax
+# traces (a cache miss), so tests can assert reuse across slots, prompt
+# buckets and engines.
+# ---------------------------------------------------------------------------
+
+_SPLICE_TRACES = {"batch": 0, "block": 0}
+
+
+def splice_trace_counts() -> Dict[str, int]:
+    """Copy of the module-wide splice retrace counters."""
+    return dict(_SPLICE_TRACES)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+@jax.jit
+def _splice_from_batch(cache, src_cache, slot, src_idx):
+    """Write batch element `src_idx` of `src_cache` into `slot` of
+    `cache` (both indices traced — one program per cache geometry)."""
+    _SPLICE_TRACES["batch"] += 1
+    groups = jax.tree.map(
+        lambda dst, src: dst.at[:, slot].set(
+            jax.lax.dynamic_index_in_dim(src, src_idx, axis=1,
+                                         keepdims=False).astype(dst.dtype)),
+        cache["groups"], src_cache["groups"])
+    tail = jax.tree.map(
+        lambda dst, src: dst.at[slot].set(
+            jax.lax.dynamic_index_in_dim(src, src_idx, axis=0,
+                                         keepdims=False).astype(dst.dtype)),
+        cache["tail"], src_cache["tail"])
+    return {"groups": groups, "tail": tail}
+
+
+@jax.jit
+def _splice_block(cache, blk, slot):
+    """Write an extracted per-slot KV block back into `slot` (traced)."""
+    _SPLICE_TRACES["block"] += 1
+    groups = jax.tree.map(
+        lambda dst, src: dst.at[:, slot].set(src.astype(dst.dtype)),
+        cache["groups"], blk["groups"])
+    tail = jax.tree.map(
+        lambda dst, src: dst.at[slot].set(src.astype(dst.dtype)),
+        cache["tail"], blk["tail"])
+    return {"groups": groups, "tail": tail}
 
 
 class DecodeEngine:
@@ -83,7 +147,18 @@ class DecodeEngine:
         self.slot_req: Dict[int, Request] = {}
         self.policy = policy or TieringPolicy(tau_hot=0.05, tau_be=5.0)
         if store is None and fabric is not None:
+            # legacy constructor dialect — the declarative path is
+            # Platform.engine(...) / store=fabric.host_view(host)
+            warnings.warn(
+                "DecodeEngine(fabric=..., host=...) is deprecated; "
+                "compile a repro.platform.HierarchySpec and use "
+                "Platform.engine(..., host=...), or pass "
+                "store=fabric.host_view(host)", DeprecationWarning,
+                stacklevel=2)
             store = fabric.host_view(host)
+        elif store is not None:
+            # a fabric host view carries its own host identity
+            host = getattr(store, "host", host)
         self.host = host
         self.store = store or TieredStore(self.policy, clock=clock)
         self.clock = self.store.clock
@@ -92,9 +167,20 @@ class DecodeEngine:
         self._paused: Dict[str, tuple] = {}
         self._pending: Dict[str, object] = {}   # rid -> PendingFetch
         self.steps = 0
+        # prompt-length bucketing is sound only when no cached sublayer
+        # carries recurrent state (pads would advance it) and there is
+        # no encoder prefix
+        self._bucket_prompts = cfg.encoder is None and all(
+            spec.kind in ("attn", "ffn", "moe")
+            for *_ignored, spec in cfg.sublayers())
+        self.jit_stats = {"prefill_traces": 0}
+
+        def _counted_prefill(*a, **kw):
+            self.jit_stats["prefill_traces"] += 1
+            return model_lib.prefill(*a, **kw)
 
         self._prefill = jax.jit(functools.partial(
-            model_lib.prefill, cfg=cfg, rules=rules,
+            _counted_prefill, cfg=cfg, rules=rules,
             compute_dtype=compute_dtype))
         self._decode = jax.jit(functools.partial(
             model_lib.decode_step, cfg=cfg, rules=rules,
@@ -106,23 +192,38 @@ class DecodeEngine:
 
     def admit(self, req: Request):
         """Prefill a request into a free slot (single-sequence prefill
-        batched into the slot grid via masking writes)."""
+        batched into the slot grid via masking writes). Prompts are
+        right-padded to a power-of-two bucket when sound (attention-only
+        caches): prefill compiles once per bucket, the causal mask keeps
+        real positions pad-independent, decode masks positions beyond
+        the fill index, and `last_index` picks the real last logits."""
         free = self._free_slots()
         if not free:
             raise RuntimeError("no free slots")
         slot = free[0]
         S = len(req.prompt)
         assert S < self.max_len
+        tokens = req.prompt
+        if self._bucket_prompts:
+            L = min(_next_pow2(S), self.max_len - 1)
+            if L > S:
+                tokens = np.concatenate(
+                    [req.prompt, np.zeros(L - S, req.prompt.dtype)])
         # run a batch-1 prefill against a temp cache, then splice the slot
         tmp_cache = model_lib.init_cache(self.cfg, 1, self.max_len,
                                          dtype=self.dtype)
-        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+        batch = {"tokens": jnp.asarray(tokens[None, :])}
         if self.cfg.encoder is not None:
             batch["frames"] = jnp.zeros(
                 (1, self.cfg.encoder.n_frames, self.cfg.d_model),
                 self.dtype)
-        tmp_cache, logits = self._prefill(self.params, batch=batch,
-                                          cache=tmp_cache)
+        if self._bucket_prompts:
+            tmp_cache, logits = self._prefill(
+                self.params, batch=batch, cache=tmp_cache,
+                last_index=jnp.asarray(S - 1, jnp.int32))
+        else:
+            tmp_cache, logits = self._prefill(self.params, batch=batch,
+                                              cache=tmp_cache)
         self._splice_slot(tmp_cache, slot)
         self.lengths[slot] = S
         self.live[slot] = True
@@ -134,14 +235,11 @@ class DecodeEngine:
 
     def _splice_slot(self, src_cache, slot: int, src_idx: int = 0):
         # group caches are stacked [G, B, ...] (batch at dim 1); tail
-        # caches are unstacked [B, ...] (batch at dim 0)
-        new_groups = jax.tree.map(
-            lambda dst, src: dst.at[:, slot].set(src[:, src_idx]),
-            self.cache["groups"], src_cache["groups"])
-        new_tail = jax.tree.map(
-            lambda dst, src: dst.at[slot].set(src[src_idx]),
-            self.cache["tail"], src_cache["tail"])
-        self.cache = {"groups": new_groups, "tail": new_tail}
+        # caches are unstacked [B, ...] (batch at dim 0). Both indices
+        # are traced, so one compiled program serves every slot.
+        self.cache = _splice_from_batch(
+            self.cache, src_cache, jnp.asarray(slot, jnp.int32),
+            jnp.asarray(src_idx, jnp.int32))
 
     def _extract_slot(self, slot: int):
         return {
@@ -237,7 +335,7 @@ class DecodeEngine:
         leaves, off = [], 0
         for shape, dtype in shapes:
             n = int(np.prod(shape))
-            leaves.append(jnp.asarray(
+            leaves.append(np.asarray(
                 blob[off:off + n].reshape(shape), dtype))
             off += n
         blk = jax.tree.unflatten(treedef, leaves)
@@ -245,13 +343,10 @@ class DecodeEngine:
         if not free:
             raise RuntimeError("no free slots")
         slot = free[0]
-        new_groups = jax.tree.map(
-            lambda dst, src: dst.at[:, slot].set(src.astype(dst.dtype)),
-            self.cache["groups"], blk["groups"])
-        new_tail = jax.tree.map(
-            lambda dst, src: dst.at[slot].set(src.astype(dst.dtype)),
-            self.cache["tail"], blk["tail"])
-        self.cache = {"groups": new_groups, "tail": new_tail}
+        # traced-slot splice: repeated (cross-host) resumes reuse one
+        # compiled program regardless of the landing slot
+        self.cache = _splice_block(self.cache, blk,
+                                   jnp.asarray(slot, jnp.int32))
         self.lengths[slot] = length
         self.live[slot] = True
         req.slot = slot

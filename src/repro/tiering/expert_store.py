@@ -22,16 +22,19 @@ prefetch one layer of compute ahead, and every routing feeds the
 placement policy — with an `autopilot.gate.EconomicGate` that is the
 break-even admission loop for expert weights.
 
-Fleet mode: construct with `fabric=` (a
-`repro.runtime.fabric.ShardedTieredStore`), `host=` and `replicas=` to
-shard replicated cold experts over the multi-host fabric — each expert
-lives on its `replicas` consistent-hash owner hosts, a selection served
-by a co-resident replica is a local flash read, and the rest stream
-over the NIC transfer tier composed with the remote host's flash.
+Fleet mode: pass `store=fabric.host_view(host, replicas=r)` (what
+`repro.platform.Platform.expert_store` does) to shard replicated cold
+experts over the multi-host fabric — each expert lives on its
+`replicas` consistent-hash owner hosts, a selection served by a
+co-resident replica is a local flash read, and the rest stream over the
+NIC transfer tier composed with the remote host's flash. The old
+`fabric=`/`host=`/`replicas=` constructor dialect still works as a thin
+deprecated shim.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Optional
 
 import numpy as np
@@ -49,7 +52,18 @@ class ExpertStore:
         self.n_experts = n_experts
         self.policy = policy
         if store is None and fabric is not None:
+            # legacy constructor dialect — the declarative path is
+            # Platform.expert_store(...) / a fabric host view
+            warnings.warn(
+                "ExpertStore(fabric=..., host=..., replicas=...) is "
+                "deprecated; compile a repro.platform.HierarchySpec and "
+                "use Platform.expert_store(...), or pass "
+                "store=fabric.host_view(host, replicas=...)",
+                DeprecationWarning, stacklevel=2)
             store = fabric.host_view(host, replicas=replicas)
+        elif store is not None:
+            # a fabric host view carries its own host identity
+            host = getattr(store, "host", host)
         self.host = host
         self.store = store or TieredStore(policy, clock=clock)
         self.clock = self.store.clock

@@ -285,7 +285,7 @@ def test_fleet_bench_surfaces_deferral_stats():
 def test_expert_store_shards_replicated_cold_experts():
     fab = _fabric(4)
     es = ExpertStore(n_layers=1, n_experts=8, policy=_pinned(),
-                     fabric=fab, host=0, replicas=2)
+                     store=fab.host_view(0, replicas=2))
     w = np.arange(32 * 32, dtype=np.float32).reshape(32, 32)
     for e in range(8):
         es.store.put((0, e), w, tier=Tier.FLASH)
@@ -393,9 +393,9 @@ def test_engine_cross_host_pause_resume_streams_kv():
     rid = next(f"s{i}" for i in range(64)
                if fab.owner(("kv", f"s{i}")) == 0)
     eng0 = DecodeEngine(cfg, params, rules, max_slots=2, max_len=64,
-                        fabric=fab, host=0, step_time=1e-3)
+                        store=fab.host_view(0), step_time=1e-3)
     eng1 = DecodeEngine(cfg, params, rules, max_slots=2, max_len=64,
-                        fabric=fab, host=1, step_time=1e-3)
+                        store=fab.host_view(1), step_time=1e-3)
     rng = np.random.default_rng(0)
     req = Request(rid=rid, prompt=rng.integers(
         1, cfg.vocab, 6).astype(np.int32), max_new=8)

@@ -449,7 +449,7 @@ def test_expert_store_locality_host():
     from repro.tiering.expert_store import ExpertStore
     fab = _fabric(3)
     es = ExpertStore(n_layers=1, n_experts=4, policy=_pinned(),
-                     fabric=fab, host=0)
+                     store=fab.host_view(0))
     es.store.put((0, 0), np.zeros(128, np.float32), tier=Tier.FLASH)
     fab.drain()
     assert es.locality_host(0, 0) == fab.owner((0, 0))

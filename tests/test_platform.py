@@ -1,0 +1,545 @@
+"""Platform-API tests: spec validation + JSON round-trip, compile
+parity with the keyword dialect, the capacity-weighted ring's fairness
+and stall win, uniform handles, the closed provisioning loop's
+acceptance criterion, the legacy constructor shims, the splice-jit
+cache, and the roofline step-time hook."""
+import dataclasses
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.policy import Tier, TieringPolicy
+from repro.platform import (AutoscaleDecl, HierarchySpec, HostDecl,
+                            NetDecl, Platform, PolicyDecl, TierDecl,
+                            TopologyDecl, measured_step_time,
+                            run_autoscale_bench)
+from repro.runtime.clock import VirtualClock
+from repro.runtime.fabric import ShardedTieredStore
+from repro.serving.bench import multi_host_session_bench
+
+
+def _pinned(_h=0):
+    return TieringPolicy(tau_hot=1e-12, tau_be=1e-9, ema_alpha=1.0)
+
+
+# ---------------------------------------------------------------------------
+# spec validation: invalid specs raise with actionable messages
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec, fragment", [
+    (HierarchySpec(hosts=()), "at least one host"),
+    (HierarchySpec(hosts=(HostDecl(
+        tiers={"dram": TierDecl(0.0, 45e9, 5e-7)}),)),
+     "capacity_bytes must be > 0"),
+    (HierarchySpec(hosts=(HostDecl(
+        tiers={"l2": TierDecl(1e9, 1e9, 1e-7)}),)), "unknown tier"),
+    (HierarchySpec(policy=PolicyDecl(kind="lru")), "unknown policy kind"),
+    (HierarchySpec(policy=PolicyDecl(kind="static")),
+     "needs explicit tau_hot"),
+    (HierarchySpec(policy=PolicyDecl(host_profile="tpu")),
+     "unknown host_profile"),
+    (HierarchySpec(hosts=(HostDecl(count=3),), weights=(1.0, 2.0)),
+     "2 ring weights for 3 hosts"),
+    (HierarchySpec(weights=(-1.0,)), "weights must be positive"),
+    (HierarchySpec(weighting="dram"), "unknown weighting"),
+    (HierarchySpec(clock="sundial"), "unknown clock source"),
+    (HierarchySpec(step_time="profiled"), "seconds or 'measured'"),
+    (HierarchySpec(class_priors={"kv": -1.0}), "positive seconds"),
+    (HierarchySpec(replicas=0), "must be >= 1"),
+    (HierarchySpec(write_shield_depth=0), "shield forever"),
+    (HierarchySpec(rebalance_rate=-5.0), "positive bytes/s"),
+    (HierarchySpec(autoscale=AutoscaleDecl(min_hosts=4, max_hosts=2)),
+     "max_hosts=2 < min_hosts=4"),
+    (HierarchySpec(autoscale=AutoscaleDecl(template=3)), "out of range"),
+])
+def test_invalid_specs_raise_actionable(spec, fragment):
+    with pytest.raises(ValueError, match=fragment):
+        spec.validate()
+
+
+def test_factory_policy_compiles_but_does_not_serialize():
+    spec = HierarchySpec(hosts=(HostDecl(count=2),), policy=_pinned)
+    platform = Platform.compile(spec)
+    assert platform.n_hosts == 2
+    assert platform.policy(0).tau_be == 1e-9
+    with pytest.raises(ValueError, match="cannot be serialized"):
+        spec.to_json()
+    with pytest.raises(ValueError, match="no advisor"):
+        platform.advise()
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip: equality and identical compiled behavior
+# ---------------------------------------------------------------------------
+
+def _rich_spec():
+    return HierarchySpec(
+        hosts=(HostDecl(tiers={"dram": TierDecl(256e9, 45e9, 5e-7)}),
+               HostDecl(count=3)),
+        policy=PolicyDecl.economic(l_blk=64 << 10, alpha_stall=2.0),
+        topology=TopologyDecl(hosts_per_rack=2),
+        net=NetDecl(rtt=30e-6),
+        class_priors={"kv": 2.0, "expert": 0.5},
+        replicas=2, vnodes=96, write_shield_depth=3,
+        rebalance_rate=2e9, step_time=1e-3,
+        autoscale=AutoscaleDecl(max_hosts=6, active_window=4.0))
+
+
+def test_spec_json_round_trip_equal():
+    spec = _rich_spec()
+    again = HierarchySpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.to_json() == spec.to_json()        # byte-stable
+
+
+def test_from_json_rejects_garbage():
+    with pytest.raises(ValueError, match="not valid JSON"):
+        HierarchySpec.from_json("{nope")
+    with pytest.raises(ValueError, match="unknown fields"):
+        HierarchySpec.from_json(json.dumps({"n_hosts": 4}))
+    bad = json.loads(HierarchySpec().to_json())
+    bad["version"] = 99
+    with pytest.raises(ValueError, match="version 99"):
+        HierarchySpec.from_json(json.dumps(bad))
+
+
+def test_round_tripped_spec_compiles_to_identical_smoke_bench():
+    spec = HierarchySpec(hosts=(HostDecl(count=4),),
+                         policy=PolicyDecl.pinned_flash())
+    kw = dict(n_sessions=6, rounds=1, kv_bytes=1 << 18, decode_steps=4,
+              step_time=1e-3, lead=2, seed=0)
+    a = multi_host_session_bench("async", spec=spec, **kw)
+    b = multi_host_session_bench(
+        "async", spec=HierarchySpec.from_json(spec.to_json()), **kw)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# compile parity: the declarative path reproduces the keyword dialect
+# ---------------------------------------------------------------------------
+
+def test_homogeneous_spec_matches_classic_bench_byte_identical():
+    kw = dict(n_sessions=8, rounds=2, kv_bytes=1 << 19, decode_steps=8,
+              step_time=2e-3, lead=6, skew=1.2, seed=0)
+    classic = multi_host_session_bench("async", n_hosts=4, **kw)
+    spec = HierarchySpec(hosts=(HostDecl(count=4),),
+                         policy=PolicyDecl.pinned_flash())
+    declared = multi_host_session_bench("async", spec=spec, **kw)
+    assert json.dumps(classic, sort_keys=True) == \
+        json.dumps(declared, sort_keys=True)
+
+
+def test_heterogeneous_spec_equal_weights_matches_homogeneous():
+    """The acceptance shape: a heterogeneous 4-host spec (one host with
+    2x DRAM) run with uniform ring weights reproduces the homogeneous
+    keyword-dialect smoke record byte-for-byte — capacity skew only
+    changes behavior through the weighting, never through the pinned
+    flash restore path."""
+    kw = dict(n_sessions=8, rounds=2, kv_bytes=1 << 19, decode_steps=8,
+              step_time=2e-3, lead=6, skew=0.0, seed=0)
+    classic = multi_host_session_bench("async", n_hosts=4, **kw)
+    het = HierarchySpec(
+        hosts=(HostDecl(tiers={"dram": TierDecl(256e9, 45e9, 5e-7)}),
+               HostDecl(count=3)),
+        policy=PolicyDecl.pinned_flash(), weighting="uniform")
+    declared = multi_host_session_bench("async", spec=het, **kw)
+    assert json.dumps(classic, sort_keys=True) == \
+        json.dumps(declared, sort_keys=True)
+
+
+def test_spec_conflicting_kwargs_rejected():
+    spec = HierarchySpec(hosts=(HostDecl(count=2),),
+                         policy=PolicyDecl.pinned_flash())
+    with pytest.raises(ValueError, match="rebalance_rate"):
+        multi_host_session_bench("async", spec=spec, rebalance_rate=1e9,
+                                 n_sessions=2, rounds=1)
+
+
+def test_equal_weights_reproduce_unweighted_ring():
+    classic = ShardedTieredStore(4, policy_factory=_pinned,
+                                 clock=VirtualClock())
+    p = Platform.compile(HierarchySpec(hosts=(HostDecl(count=4),),
+                                       policy=PolicyDecl.pinned_flash()))
+    assert p.fabric._ring_points == classic._ring_points
+    assert p.fabric._ring_hosts == classic._ring_hosts
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous hosts: weighted-ring fairness + the stall win
+# ---------------------------------------------------------------------------
+
+def test_weighted_ring_fairness_two_to_one():
+    """2:1 capacity weights -> key ownership within 5% of 2:1 on 1000
+    keys (guards the weighted-ring hash mixing)."""
+    spec = HierarchySpec(
+        hosts=(HostDecl(tiers={"dram": TierDecl(256e9, 45e9, 5e-7)}),
+               HostDecl(tiers={"dram": TierDecl(128e9, 45e9, 5e-7)})),
+        policy=PolicyDecl.pinned_flash(), vnodes=128)
+    assert spec.resolved_weights() == [2.0, 1.0]
+    fabric = Platform.compile(spec).fabric
+    counts = {0: 0, 1: 0}
+    for i in range(1000):
+        counts[fabric.owner(("kv", f"s{i}"))] += 1
+    ratio = counts[0] / counts[1]
+    assert 2.0 * 0.95 <= ratio <= 2.0 * 1.05, counts
+
+
+def _het_spec(weighting):
+    small = 3 * (1 << 19)           # three sessions' worth of DRAM
+    return HierarchySpec(
+        hosts=(HostDecl(tiers={"dram": TierDecl(2 * small, 45e9, 5e-7)}),
+               HostDecl(tiers={"dram": TierDecl(small, 45e9, 5e-7)},
+                        count=3)),
+        policy=PolicyDecl.pinned_dram(), weighting=weighting, vnodes=128)
+
+
+def test_capacity_weighting_beats_uniform_on_skewed_dram():
+    """One host with 2x DRAM: the capacity-weighted ring keeps the
+    DRAM-resident working set placed, the uniform ring overflows the
+    small hosts onto flash — measurably more restore stall."""
+    kw = dict(kv_tier=Tier.DRAM, n_sessions=14, rounds=3,
+              kv_bytes=1 << 19, decode_steps=8, step_time=2e-3, lead=6,
+              seed=0)
+    weighted = multi_host_session_bench(
+        "sync", spec=_het_spec("capacity"), **kw)
+    uniform = multi_host_session_bench(
+        "sync", spec=_het_spec("uniform"), **kw)
+    assert weighted["per_token_stall"] < uniform["per_token_stall"]
+
+
+# ---------------------------------------------------------------------------
+# uniform handles
+# ---------------------------------------------------------------------------
+
+def test_kv_session_handle_idiom():
+    spec = HierarchySpec(hosts=(HostDecl(count=2),),
+                         policy=PolicyDecl.pinned_flash(), replicas=2)
+    p = Platform.compile(spec)
+    sess = p.kv_session("u1")
+    blob = np.arange(1 << 14, dtype=np.float32)
+    wh = sess.save(blob, tier=Tier.FLASH)
+    assert wh.done() and wh.result() is None        # writes never block
+    p.drain()
+    assert sess.tier() == Tier.FLASH
+    h1 = sess.prefetch()
+    assert sess.prefetch() is h1                    # idempotent in flight
+    assert not h1.done()
+    p.fabric.hosts[sess.preferred_host()].runtime.advance(1.0)
+    assert h1.done()
+    np.testing.assert_array_equal(h1.result(), blob)
+    assert h1.result() is h1.result()               # cached after wait
+    assert sess.prefetch() is not h1                # consumed -> fresh
+    assert sess.lead_steps(1e-3) >= 1
+    # replica-aware routing rebinds to a holder host
+    assert sess.route().host in p.fabric.holders(sess.key)
+    np.testing.assert_array_equal(sess.resume(), blob)
+
+
+def test_wall_clock_compile_and_passthroughs():
+    from repro.runtime.clock import WallClock
+    spec = HierarchySpec(hosts=(HostDecl(),), clock="wall",
+                         policy=PolicyDecl.pinned_flash())
+    p = Platform.compile(spec)
+    assert isinstance(p.clock, WallClock)
+    sess = p.kv_session("w")
+    sess.save(np.zeros(64, np.float32), tier=Tier.FLASH)
+    p.drain()
+    p.reset_stats()
+    assert p.summary()["hosts"] == 1.0
+    assert "host 0:" in p.report()
+
+
+def test_platform_expert_store_and_engine_are_warning_free():
+    spec = HierarchySpec(hosts=(HostDecl(count=2),),
+                         policy=PolicyDecl.pinned_flash())
+    p = Platform.compile(spec)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        es = p.expert_store(n_layers=1, n_experts=4, host=1, replicas=2)
+    assert es.host == 1                 # host identity from the view
+    assert es.store.replicas == 2
+    es.store.put((0, 0), np.zeros(256, np.float32), tier=Tier.FLASH)
+    p.drain()
+    assert len(p.fabric.holders((0, 0))) == 2
+
+
+# ---------------------------------------------------------------------------
+# closed provisioning loop: the acceptance criterion
+# ---------------------------------------------------------------------------
+
+def test_autoscale_diurnal_closed_loop_acceptance():
+    """On the diurnal trace the loop adds a host during the peak,
+    removes it off-peak, ends within one host of the advisor's final
+    recommendation, at <= the static fleet's modeled $/token."""
+    r = run_autoscale_bench(n_steps=240)
+    a = r["autoscaled"]
+    actions = [d["action"] for d in a["decisions"]]
+    assert "add" in actions, a["decisions"]
+    assert "remove" in actions, a["decisions"]
+    add_step = next(d["step"] for d in a["decisions"]
+                    if d["action"] == "add")
+    remove_step = next(d["step"] for d in a["decisions"]
+                       if d["action"] == "remove")
+    # the peak is the diurnal overlap (middle third); off-peak follows
+    assert 240 / 3 <= add_step < remove_step
+    assert a["hosts_peak"] > a["hosts_start"]
+    assert a["hosts_final"] < a["hosts_peak"]
+    assert r["final_within_one_of_advice"]
+    assert r["autoscale_wins"], (a["cost_per_token"],
+                                 r["static"]["cost_per_token"])
+
+
+def test_autoscale_bench_deterministic_in_process():
+    kw = dict(n_steps=60, every=10)
+    a = run_autoscale_bench(**kw)
+    b = run_autoscale_bench(**kw)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_autoscaler_never_underprovisions_heterogeneous_fleet():
+    """The advisor's host count is denominated in template-host DRAM;
+    on a mixed fleet, count-matching by retiring small hosts would
+    strand the hot set below its byte target. The loop must hold
+    instead (and still retire when capacity allows)."""
+    from types import SimpleNamespace
+    blk = 1 << 20
+    spec = HierarchySpec(
+        hosts=(HostDecl(tiers={"dram": TierDecl(20 * blk, 45e9, 5e-7)}),
+               HostDecl(tiers={"dram": TierDecl(5 * blk, 45e9, 5e-7)},
+                        count=3)),
+        policy=PolicyDecl.economic(l_blk=blk),
+        autoscale=AutoscaleDecl(min_hosts=1, max_hosts=8,
+                                cooldown_steps=0, template=0))
+    p = Platform.compile(spec)          # 35 blocks of fleet DRAM
+
+    def stub_advise(target_blocks, horizon=None):
+        return SimpleNamespace(recommended_hosts=2,
+                               recommended_dram_bytes=target_blocks * blk)
+
+    # target 33.3 blocks: dropping any 5-block host under-provisions
+    p.advise = lambda horizon=None: stub_advise(33.3)
+    d = p.autoscale(0)
+    assert d.action == "hold" and p.n_hosts == 4
+    # target 20 blocks: the newest small host can safely retire
+    p.advise = lambda horizon=None: stub_advise(20.0)
+    d = p.autoscale(1)
+    assert d.action == "remove" and p.n_hosts == 3
+
+
+def test_autoscaler_respects_cooldown_and_bounds():
+    spec = dataclasses.replace(
+        HierarchySpec(hosts=(HostDecl(count=2),),
+                      policy=PolicyDecl.economic(l_blk=1 << 16)),
+        autoscale=AutoscaleDecl(min_hosts=2, max_hosts=2,
+                                cooldown_steps=5))
+    p = Platform.compile(spec)
+    # empty fleet: advisor recommends 1 but min_hosts clamps to 2
+    d = p.autoscale(0)
+    assert d.action == "hold" and p.n_hosts == 2
+    assert d.recommended == 2
+
+
+# ---------------------------------------------------------------------------
+# advisor staleness window (what makes scale-down possible)
+# ---------------------------------------------------------------------------
+
+def test_advisor_active_window_releases_stale_pool():
+    from repro.autopilot.advisor import ProvisionAdvisor
+    from repro.core.economics import GPU_GDDR
+    from repro.core.ssd_model import storage_next_ssd
+    from repro.runtime.tiers import TieredStore
+    from repro.autopilot.gate import EconomicGate
+
+    clock = VirtualClock()
+    gate = EconomicGate(tau_hot=1e-3, tau_be=10.0)
+    store = TieredStore(gate, clock=clock)
+    blob = np.zeros(1 << 14, np.float32)
+    for i in range(8):
+        store.put(("kv", f"a{i}"), blob)
+    for _ in range(4):                      # demonstrate ~1s reuse
+        clock.advance(1.0)
+        for i in range(8):
+            store.get(("kv", f"a{i}"))
+    clock.advance(50.0)                     # pool A goes idle
+    for i in range(8):                      # pool B takes over
+        store.put(("kv", f"b{i}"), blob)
+    for _ in range(4):
+        clock.advance(1.0)
+        for i in range(8):
+            store.get(("kv", f"b{i}"))
+    kw = dict(l_blk=float(blob.nbytes))
+    plain = ProvisionAdvisor(GPU_GDDR, storage_next_ssd(),
+                             **kw).advise(gate.tracker, store=store)
+    windowed = ProvisionAdvisor(GPU_GDDR, storage_next_ssd(),
+                                active_window=10.0,
+                                **kw).advise(gate.tracker, store=store)
+    # the stale pool stops counting toward the hot set
+    assert windowed.hot_bytes < plain.hot_bytes
+    assert windowed.hot_bytes <= 8 * blob.nbytes + 1
+
+
+# ---------------------------------------------------------------------------
+# legacy constructor shims: deprecated but functional (the only test
+# allowed to trigger DeprecationWarning — see the CI deprecation gate)
+# ---------------------------------------------------------------------------
+
+def test_legacy_fabric_dialects_warn_but_work():
+    from repro.tiering.expert_store import ExpertStore
+    fab = ShardedTieredStore(2, policy_factory=_pinned,
+                             clock=VirtualClock())
+    with pytest.warns(DeprecationWarning, match="ExpertStore"):
+        es = ExpertStore(n_layers=1, n_experts=2, policy=_pinned(),
+                         fabric=fab, host=1, replicas=2)
+    assert es.host == 1
+    es.store.put((0, 0), np.zeros(64, np.float32), tier=Tier.FLASH)
+    fab.drain()
+    assert len(fab.holders((0, 0))) == 2
+
+
+def test_legacy_engine_dialect_warns(setup_engine):
+    from repro.serving.engine import DecodeEngine
+    cfg, rules, params = setup_engine
+    fab = ShardedTieredStore(2, policy_factory=_pinned,
+                             clock=VirtualClock())
+    with pytest.warns(DeprecationWarning, match="DecodeEngine"):
+        eng = DecodeEngine(cfg, params, rules, max_slots=2, max_len=64,
+                           fabric=fab, host=1)
+    assert eng.host == 1
+    assert eng.store.fabric is fab
+
+
+# ---------------------------------------------------------------------------
+# splice-jit cache: pow2 prompt buckets + traced-slot splices
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup_engine():
+    import jax
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.parallel.sharding import single_device_rules
+    cfg = get_config("gemma-2b", reduced=True)
+    rules = single_device_rules()
+    params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, rules, params
+
+
+def test_prompt_bucketing_one_compile_per_bucket(setup_engine):
+    from repro.serving.engine import DecodeEngine, Request
+    cfg, rules, params = setup_engine
+    eng = DecodeEngine(cfg, params, rules, max_slots=4, max_len=64)
+    assert eng._bucket_prompts
+    rng = np.random.default_rng(0)
+    for i, n in enumerate((5, 7, 8)):       # one pow2 bucket: 8
+        eng.admit(Request(rid=f"r{i}",
+                          prompt=rng.integers(1, cfg.vocab, n).astype(
+                              np.int32)))
+    assert eng.jit_stats["prefill_traces"] == 1
+    eng.admit(Request(rid="r9", prompt=rng.integers(
+        1, cfg.vocab, 9).astype(np.int32)))  # next bucket: 16
+    assert eng.jit_stats["prefill_traces"] == 2
+
+
+def test_bucketed_admit_matches_exact_generation(setup_engine):
+    """Pad-to-bucket prefill must not change greedy generation: causal
+    masking keeps real positions pad-independent and decode masks
+    beyond the fill index."""
+    from repro.serving.engine import DecodeEngine, Request
+    cfg, rules, params = setup_engine
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, cfg.vocab, 6).astype(np.int32)
+
+    bucketed = DecodeEngine(cfg, params, rules, max_slots=1, max_len=64)
+    exact = DecodeEngine(cfg, params, rules, max_slots=1, max_len=64)
+    exact._bucket_prompts = False
+    outs = []
+    for eng in (bucketed, exact):
+        req = Request(rid="r", prompt=prompt.copy(), max_new=6)
+        eng.run([req])
+        outs.append(req.generated)
+    assert outs[0] == outs[1]
+
+
+def test_resume_splice_reuses_one_program_across_slots_and_engines(
+        setup_engine):
+    from repro.serving import engine as engine_mod
+    from repro.serving.engine import DecodeEngine, Request
+    cfg, rules, params = setup_engine
+    clock = VirtualClock()
+    fab = ShardedTieredStore(2, policy_factory=_pinned, clock=clock)
+    eng0 = DecodeEngine(cfg, params, rules, max_slots=2, max_len=64,
+                        store=fab.host_view(0), step_time=1e-3)
+    eng1 = DecodeEngine(cfg, params, rules, max_slots=2, max_len=64,
+                        store=fab.host_view(1), step_time=1e-3)
+    rng = np.random.default_rng(0)
+    for i in range(2):
+        eng0.admit(Request(rid=f"s{i}", prompt=rng.integers(
+            1, cfg.vocab, 5).astype(np.int32)))
+    eng0.step()
+    eng0.pause("s0")
+    eng0.pause("s1")
+    clock.advance(1.0)
+    # first resume may trace the block-splice program once; the second
+    # (different slot) and the cross-host third must reuse it
+    eng0.resume("s0")
+    base = engine_mod.splice_trace_counts()["block"]
+    eng0.resume("s1")                       # second slot, same engine
+    eng0.pause("s1")
+    state = eng0.export_session("s1")
+    eng1.import_session("s1", state)
+    clock.advance(1.0)
+    eng1.resume("s1")                       # cross-host resume
+    assert engine_mod.splice_trace_counts()["block"] == base
+
+
+# ---------------------------------------------------------------------------
+# roofline hook: measured step time with modeled fallback
+# ---------------------------------------------------------------------------
+
+def _fake_roofline(tmp_path, arch, shape, bound):
+    rec = {"arch": arch, "shape": shape,
+           "roofline": {"step_time_bound": bound}}
+    (tmp_path / f"{arch}__{shape}__single.json").write_text(
+        json.dumps(rec))
+
+
+def test_measured_step_time_reads_roofline_results(tmp_path):
+    _fake_roofline(tmp_path, "gemma-2b", "decode_32k", 3e-3)
+    _fake_roofline(tmp_path, "qwen3-moe", "decode_32k", 7e-3)
+    (tmp_path / "corrupt__decode_32k__single.json").write_text("{nope")
+    assert measured_step_time(
+        arch="gemma-2b", results_dir=str(tmp_path)) == 3e-3
+    # fleet-wide: the slowest decode bound (conservative lead budget)
+    assert measured_step_time(results_dir=str(tmp_path)) == 7e-3
+    assert measured_step_time(arch="absent",
+                              results_dir=str(tmp_path)) is None
+
+
+def test_spec_measured_step_time_with_fallback(tmp_path):
+    _fake_roofline(tmp_path, "gemma-2b", "decode_32k", 4e-3)
+    spec = HierarchySpec(step_time="measured", step_time_fallback=9e-4,
+                         roofline_results=str(tmp_path))
+    assert spec.resolved_step_time() == 4e-3
+    off_hw = dataclasses.replace(spec,
+                                 roofline_results=str(tmp_path / "no"))
+    assert off_hw.resolved_step_time() == 9e-4
+    assert Platform.compile(dataclasses.replace(
+        off_hw, policy=PolicyDecl.pinned_flash())).step_time == 9e-4
+
+
+# ---------------------------------------------------------------------------
+# deprecation hygiene: the declarative bench paths are warning-clean
+# (the CI gate runs the CLIs under -W error::DeprecationWarning)
+# ---------------------------------------------------------------------------
+
+def test_spec_bench_path_is_deprecation_clean():
+    spec = HierarchySpec(hosts=(HostDecl(count=2),),
+                         policy=PolicyDecl.pinned_flash())
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        multi_host_session_bench("async", spec=spec, n_sessions=2,
+                                 rounds=1, kv_bytes=1 << 16,
+                                 decode_steps=2, step_time=1e-3, lead=1)
+        run_autoscale_bench(n_steps=20, every=5)
