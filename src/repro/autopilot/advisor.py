@@ -84,6 +84,55 @@ class ProvisionAdvice:
         return "\n".join(lines)
 
 
+@dataclasses.dataclass
+class AvailabilityAdvice:
+    """Replication-factor recommendation: availability priced in $/s.
+
+    `arms` maps each candidate replication factor r to its modeled
+    cost-rate breakdown (NAND-die-normalized $ per second, the same
+    units every cost-reporting bench uses):
+
+      * rent   — extra DRAM byte-seconds for the r-1 replica copies
+      * write  — extra wire + flash-page cost for streaming r-1 copies
+                 on every put
+      * repair — expected re-replication traffic after failures
+                 (failure rate x bytes to re-stream per failure)
+      * loss   — expected failure stall: with r=1 the dead host's
+                 resident bytes are *gone* and must be recomputed /
+                 re-ingested while the serving resource stalls;
+                 replication converts this to a degraded read
+    """
+    mttf: float                     # per-host mean time to failure (s)
+    failure_rate: float             # expected host failures / s (fleet)
+    resident_bytes: float
+    n_hosts: int
+    recommended_replicas: int
+    arms: Dict[int, Dict[str, float]]
+    verdict: str
+
+    def as_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        # JSON object keys are strings; keep the emitted dict stable
+        d["arms"] = {str(r): row for r, row in sorted(self.arms.items())}
+        return d
+
+    def report(self) -> str:
+        lines = [f"mttf={self.mttf:.0f}s/host  "
+                 f"fleet failure rate={self.failure_rate:.2e}/s  "
+                 f"resident={self.resident_bytes/2**20:.1f}MiB "
+                 f"on {self.n_hosts} host(s)"]
+        for r, row in sorted(self.arms.items()):
+            tag = " <- recommended" if r == self.recommended_replicas \
+                else ""
+            lines.append(
+                f"  r={r}: total={row['total']:.3e}/s  "
+                f"(rent={row['rent']:.2e} write={row['write']:.2e} "
+                f"repair={row['repair']:.2e} loss={row['loss']:.2e})"
+                f"{tag}")
+        lines.append(f"VERDICT: {self.verdict}")
+        return "\n".join(lines)
+
+
 class ProvisionAdvisor:
     def __init__(self, host: HostConfig, ssd: SsdConfig, l_blk: float, *,
                  gamma_rw: float = 9.0, phi_wa: float = 3.0,
@@ -236,6 +285,111 @@ class ProvisionAdvisor:
             recommended_hosts=hosts, t_b=float(t_b), t_s=float(t_s),
             t_c=float(t_c), limit=limit, verdict=verdict,
             classes=classes, rebalance=rebalance)
+
+    # ------------------------------------------------------- availability
+    def advise_availability(self, *, fabric=None,
+                            resident_bytes: Optional[float] = None,
+                            n_hosts: Optional[int] = None,
+                            dram_fraction: Optional[float] = None,
+                            mttf: float,
+                            alpha_stall: float = 4.0,
+                            recompute_seconds: float = 1.0,
+                            put_bytes_per_second: float = 0.0,
+                            max_replicas: int = 3) -> AvailabilityAdvice:
+        """Recommend a replication factor the way `advise` recommends a
+        DRAM:flash split: price each candidate r and pick the cheapest.
+
+        The availability version of Eq. 1's tradeoff — replication
+        *rent* (extra DRAM byte-seconds for the copies, extra wire +
+        flash-page writes on every put, expected repair traffic after
+        failures) against the expected *failure stall* of running
+        unreplicated: a lost object's only copy is gone, so the serving
+        resource (priced at `alpha_stall`, the same normalized rent the
+        AI-era Eq. 1 correction uses) stalls `recompute_seconds` per
+        object to regenerate it — a decode recompute, not an SSD
+        re-read, which is exactly why the loss term dwarfs the IO rates
+        at serving-scale MTTFs. With a long MTTF the loss term vanishes
+        and r=1 wins; as MTTF shrinks the expected stall crosses the
+        copy rent and the recommendation steps up — the bench's
+        kill-at-peak scenario checks the recommendation against
+        measured $/token.
+
+        Pass `fabric=` to census live state, or the explicit scalars."""
+        if mttf <= 0:
+            raise ValueError("mttf must be positive seconds per host")
+        if max_replicas < 1:
+            raise ValueError("max_replicas must be >= 1")
+        if fabric is not None:
+            stores = list(fabric.hosts.values())
+            seen: Dict[object, int] = {}
+            for s in stores:
+                for key in s.keys():
+                    seen.setdefault(key, s.nbytes_of(key))
+            if resident_bytes is None:
+                resident_bytes = float(sum(seen.values()))
+            if n_hosts is None:
+                n_hosts = fabric.n_hosts
+            if dram_fraction is None:
+                used = sum(s.used_bytes(Tier.DRAM)
+                           + s.used_bytes(Tier.FLASH) for s in stores)
+                dram = sum(s.used_bytes(Tier.DRAM) for s in stores)
+                dram_fraction = dram / used if used > 0 else 0.0
+        if resident_bytes is None or n_hosts is None:
+            raise ValueError(
+                "pass fabric= or both resident_bytes= and n_hosts=")
+        if dram_fraction is None:
+            dram_fraction = 0.0
+        n_hosts = int(n_hosts)
+        if n_hosts < 1:
+            raise ValueError("n_hosts must be >= 1")
+
+        # lazy: bench.py imports this module at load time
+        from .bench import PAGE_BYTES, pricing_rates
+        rates = pricing_rates(self.host, self.ssd)
+        lam = n_hosts / mttf            # fleet-wide failures per second
+        share = resident_bytes / n_hosts    # bytes lost with one host
+        page_rate = rates["page_io_cost"] / PAGE_BYTES  # $ per byte of IO
+        wire = rates["dram_wire_rate"]
+
+        arms: Dict[int, Dict[str, float]] = {}
+        # a copy set cannot exceed the fleet; candidate arms above
+        # n_hosts would silently price the same placement
+        r_max = min(max_replicas, n_hosts)
+        for r in range(1, r_max + 1):
+            rent = (r - 1) * resident_bytes * dram_fraction \
+                * rates["rent_rate"]
+            write = (r - 1) * put_bytes_per_second * (wire + page_rate)
+            if r >= 2:
+                # a failure re-streams the dead host's share; the ring
+                # shrink also re-targets surviving copy sets, so repair
+                # traffic scales with the total copies the host touched
+                repair = lam * (r * share) * (wire + 2.0 * page_rate)
+                loss = 0.0
+            else:
+                repair = 0.0
+                # sole copies gone: the serving resource stalls
+                # `recompute_seconds` per lost object to regenerate the
+                # dead host's resident share (share/l_blk objects)
+                loss = lam * (share / self.l_blk) \
+                    * recompute_seconds * alpha_stall
+            arms[r] = {"rent": float(rent), "write": float(write),
+                       "repair": float(repair), "loss": float(loss),
+                       "total": float(rent + write + repair + loss)}
+
+        recommended = min(sorted(arms),
+                          key=lambda r: (arms[r]["total"], r))
+        if recommended == 1:
+            verdict = ("run unreplicated: at this MTTF the expected "
+                       "failure stall is cheaper than copy rent")
+        else:
+            verdict = (f"replicate x{recommended}: expected failure "
+                       f"stall at mttf={mttf:.0f}s outprices the copy "
+                       f"rent + repair traffic")
+        return AvailabilityAdvice(
+            mttf=float(mttf), failure_rate=float(lam),
+            resident_bytes=float(resident_bytes), n_hosts=n_hosts,
+            recommended_replicas=int(recommended), arms=arms,
+            verdict=verdict)
 
     def _verdict(self, limit: str, target: float, dram_cap: float,
                  hosts: int, cur_hosts: int) -> str:

@@ -137,6 +137,13 @@ class EconomicGate(TieringPolicy):
         self._tier[key] = decided
         return decided
 
+    def forget_keys(self, keys) -> None:
+        """Key loss purges both the inherited placement state and the
+        tracker's ghost entry, so a re-created key is a genuine first
+        touch (priced by the class prior, not its dead predecessor)."""
+        super().forget_keys(keys)
+        self.tracker.forget_keys(keys)
+
     # ------------------------------------------------------------- eviction
     def evict_candidates(self, tier: Tier, now: Optional[float] = None,
                          limit: int = 0):

@@ -114,6 +114,16 @@ class ReuseTracker:
     def last_seen(self, key) -> Optional[float]:
         return self._last_seen.get(key)
 
+    def forget_keys(self, keys: Sequence[object]) -> None:
+        """Purge ghost entries for keys that no longer exist anywhere
+        (deleted, or lost to an unplanned host failure). Without this a
+        key re-created after loss measures a spurious "reuse interval"
+        against its dead predecessor's last touch and the gate admits it
+        on evidence about an object that is gone. Class sketch mass is
+        untouched — measured history of the *class* remains valid."""
+        for key in keys:
+            self._last_seen.pop(key, None)
+
     def seed_prior(self, cls: str, interval: float, weight: float = 1.0):
         """Declared workload prior: add `weight` mass at `interval` to
         the class sketch directly (no synthetic ghost entries) — how

@@ -109,6 +109,17 @@ class TieringPolicy:
         self._tier[key] = cur
         return cur
 
+    def forget_keys(self, keys) -> None:
+        """Drop all state for `keys` — wired into delete and unplanned
+        key-loss paths. A key wiped by a host failure must look like a
+        first touch when it comes back: keeping the stale EMA/last-seen
+        would price its re-admission off an interval the object never
+        actually survived to exhibit."""
+        for key in keys:
+            self._ema.pop(key, None)
+            self._last_seen.pop(key, None)
+            self._tier.pop(key, None)
+
     def evict_candidates(self, tier: Tier, now: Optional[float] = None,
                          limit: int = 0):
         """Keys in `tier` with the stalest EMA — demotion order."""

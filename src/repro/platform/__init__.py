@@ -16,6 +16,7 @@ and CI pin byte-identical scenarios.
 from .autoscale import (AutoscaleDecision, Autoscaler,  # noqa: F401
                         default_autoscale_spec, run_autoscale_bench)
 from .compiler import Platform  # noqa: F401
+from .failover import default_failover_spec, run_failover_bench  # noqa: F401
 from .handles import Handle, KvSession  # noqa: F401
 from .roofline_hook import measured_step_time  # noqa: F401
 from .spec import (AutoscaleDecl, HierarchySpec, HostDecl,  # noqa: F401
@@ -25,6 +26,6 @@ __all__ = [
     "AutoscaleDecision", "AutoscaleDecl", "Autoscaler",
     "Handle", "HierarchySpec", "HostDecl", "KvSession", "NetDecl",
     "Platform", "PolicyDecl", "TierDecl", "TopologyDecl",
-    "default_autoscale_spec", "measured_step_time",
-    "run_autoscale_bench",
+    "default_autoscale_spec", "default_failover_spec",
+    "measured_step_time", "run_autoscale_bench", "run_failover_bench",
 ]

@@ -18,6 +18,9 @@ The facade hands out uniform capabilities:
     eng = platform.engine(cfg, params, rules, host=0)
     advice = platform.advise()
     platform.autoscale(step)        # closed provisioning loop
+    platform.fail_host(2)           # unplanned failure (no drain)
+    platform.repair()               # paced re-replication
+    platform.advise_availability()  # replication-factor pricing
 
 `autoscale` lets the advisor *drive* `add_host`/`remove_host` (under
 the spec's rebalance pacer and autoscale bounds) instead of merely
@@ -154,16 +157,34 @@ class Platform:
             store=self.fabric.host_view(host, replicas=r),
             expert_bytes=expert_bytes)
 
+    def checkpoint_steps(self, step_time: Optional[float] = None) -> int:
+        """spec.checkpoint_interval (seconds) -> decode steps for this
+        platform's step time; 0 when checkpointing is off."""
+        iv = self.spec.checkpoint_interval
+        if iv is None:
+            return 0
+        st = self.step_time if step_time is None else step_time
+        if st > 0:
+            import math
+            return max(1, int(math.ceil(iv / st)))
+        return max(1, int(round(iv)))
+
     def engine(self, cfg, params, rules, *, host: int = 0,
                step_time: Optional[float] = None, **kw):
         """Decode engine on `host`'s fabric view, stepping the shared
-        clock by the spec's (possibly roofline-measured) step time."""
+        clock by the spec's (possibly roofline-measured) step time.
+        The view replicates puts to `spec.replicas` holders — a paused
+        or checkpointed session's KV blob survives `fail_host` — and
+        `spec.checkpoint_interval` arms the engine's periodic session
+        checkpointing."""
         from ..serving.engine import DecodeEngine
+        st = self.step_time if step_time is None else step_time
+        kw.setdefault("checkpoint_interval", self.checkpoint_steps(st))
         return DecodeEngine(
             cfg, params, rules, policy=self.policy(host),
-            store=self.fabric.host_view(host),
-            step_time=self.step_time if step_time is None else step_time,
-            **kw)
+            store=self.fabric.host_view(host,
+                                        replicas=self.spec.replicas),
+            step_time=st, **kw)
 
     # ---------------------------------------------------------- provision
     def advise(self, horizon: Optional[float] = None) -> ProvisionAdvice:
@@ -186,6 +207,32 @@ class Platform:
                     spec.hosts[:spec.autoscale.template])
         return self.fabric.add_host(specs=template.tier_specs(),
                                     weight=weights[first])
+
+    def fail_host(self, host: int):
+        """Unplanned failure: drop `host` with no drain (see
+        `ShardedTieredStore.fail_host`). Returns the `FailureReport`."""
+        return self.fabric.fail_host(host)
+
+    def repair(self, batch_keys: int = 64):
+        """Re-replicate everything under-replicated or misplaced after a
+        failure, paced by the spec's `rebalance_rate`. Returns
+        `RepairStats` (its `duration` is the recovery time)."""
+        from ..runtime.repair import RepairLoop
+        return RepairLoop(self.fabric, batch_keys=batch_keys).run()
+
+    def advise_availability(self, mttf: Optional[float] = None, **kw):
+        """Replication-factor recommendation priced from live fleet
+        state; `mttf` defaults to the spec's declared value."""
+        if self.advisor is None:
+            raise ValueError(
+                "platform has no advisor: availability pricing needs "
+                "the economic policy (PolicyDecl(kind='economic'))")
+        mttf = self.spec.mttf if mttf is None else mttf
+        if mttf is None:
+            raise ValueError("no MTTF declared: set spec.mttf or pass "
+                             "mttf= explicitly")
+        return self.advisor.advise_availability(fabric=self.fabric,
+                                                mttf=mttf, **kw)
 
     def autoscale(self, step: Optional[int] = None):
         """One closed-loop provisioning step: the advisor's host-count

@@ -280,6 +280,9 @@ class HierarchySpec:
     vnodes: int = 64
     write_shield_depth: Optional[int] = None
     rebalance_rate: Optional[float] = None
+    mttf: Optional[float] = None            # seconds/host (availability)
+    checkpoint_interval: Optional[float] = None     # seconds between
+    #                                 engine session checkpoints (None=off)
     autoscale: AutoscaleDecl = AutoscaleDecl()
 
     def __post_init__(self):
@@ -347,6 +350,12 @@ class HierarchySpec:
                        "threshold would shield forever)")
         if self.rebalance_rate is not None and self.rebalance_rate <= 0:
             raise _err("rebalance_rate", "must be positive bytes/s")
+        if self.mttf is not None and self.mttf <= 0:
+            raise _err("mttf", "must be positive seconds per host")
+        if self.checkpoint_interval is not None \
+                and self.checkpoint_interval <= 0:
+            raise _err("checkpoint_interval", "must be positive seconds "
+                       "(omit it to disable checkpointing)")
         self.autoscale.validate()
         if not 0 <= self.autoscale.template < len(self.hosts):
             raise _err("autoscale.template", f"host index "

@@ -1,7 +1,8 @@
 from .async_engine import AsyncTierRuntime, QueueStats, Transfer  # noqa
 from .clock import CallableClock, VirtualClock, WallClock, ensure_clock  # noqa
-from .fabric import (NIC, HostView, RebalanceStats, RemoteFetch,  # noqa
-                     ShardedTieredStore)
+from .fabric import (NIC, FailureReport, HostView,  # noqa
+                     RebalanceStats, RemoteFetch, ShardedTieredStore)
+from .repair import RepairLoop, RepairStats  # noqa
 from .service import (FabricTopology, FixedLatencyModel,  # noqa
                       NetQueueModel, Service, SsdQueueModel)
 from .tiers import PendingFetch, TierSpec, TierStats, TieredStore  # noqa

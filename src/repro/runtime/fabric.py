@@ -49,6 +49,17 @@ leads. Mid-rebalance restores at the destination are priced
 conservatively: the destination store gates reads of a streamed key on
 its NIC delivery time (readability gating, see `TieredStore.ingest`).
 
+Unplanned failure: `fail_host(h)` is `remove_host` without the
+courtesy — no drain, no retired queues. Keys resident only on h are
+lost; replicated keys survive and reads route around the dead holder
+(`holders()` only ever lists active hosts — degraded reads need no
+special path), with `RemoteFetch.wait()` falling back to a surviving
+holder when the sender died mid-flight. `under_replicated()` lists the
+keys whose copy set no longer matches their target placement;
+`repro.runtime.repair.RepairLoop` streams them back to their declared
+degree under the same `rebalance_rate` token bucket as planned
+rebalance.
+
 Admission control rides in from `TieredStore`: pass
 `write_shield_depth=k` and each host defers demotion writes while its
 flash tier has >= k fetches in flight (Flashield-style write shielding;
@@ -111,21 +122,71 @@ class RemoteFetch:
     """Handle for a cross-host fetch: the owner host's flash/DRAM read
     composed with the NIC transfer that starts when the read is done.
     `wait()` yields the value after blocking on the *unfinished* part of
-    both stages — zero stall when enough compute overlapped."""
+    both stages — zero stall when enough compute overlapped.
+
+    Degraded reads under unplanned failure: a *retired* owner
+    (`remove_host`) keeps its queues alive until in-flight egress
+    resolves, but a *failed* owner (`fail_host`) vanishes with the bytes
+    still on the wire. `wait()` then falls back to a fresh fetch from a
+    surviving holder — paying that full fetch as stall — or raises
+    `KeyError` when the key died with the host."""
     fabric: "ShardedTieredStore"
     pf: PendingFetch
     nic_tr: Transfer
     owner: int
+    dst: int = 0
+
+    def _owner_failed_in_flight(self) -> bool:
+        t_fail = self.fabric.failed.get(self.owner)
+        return t_fail is not None and self.nic_tr.done_t > t_fail + 1e-12
 
     def done(self) -> bool:
+        if self._owner_failed_in_flight():
+            return False
         return self.nic_tr.is_done(self.fabric.clock.now())
 
     def wait(self) -> np.ndarray:
+        if self._owner_failed_in_flight():
+            # the sender died before delivery: degraded re-read from a
+            # surviving holder (raises KeyError when the key was lost)
+            return self.fabric.get(self.pf.key, from_host=self.dst)
+        if self.owner in self.fabric.failed:
+            # both legs delivered before the failure instant; the dead
+            # host's queues are gone, so skip its bookkeeping entirely
+            return self.pf.value
         value = self.pf.wait()          # owner-store stats + policy move
         # the owner may have left the fleet since issue; its NIC lane
         # lives on in the retired map until the transfer resolves
         self.fabric._nic_of(self.owner).wait(self.nic_tr)
         return value
+
+
+@dataclasses.dataclass
+class FailureReport:
+    """One unplanned host failure: what died with the host.
+
+    `keys_lost` counts keys whose only copy lived on the failed host
+    (committed data gone — their values and `_key_replicas` bookkeeping
+    are purged, and `on_key_loss` subscribers fire). `keys_degraded`
+    counts keys that survive on a replica but now sit below their
+    declared replication degree until the repair loop restores it."""
+    host: int
+    t_fail: float
+    keys_resident: int = 0      # keys the host held at the instant
+    keys_lost: int = 0          # only copy was on the host
+    bytes_lost: int = 0
+    keys_degraded: int = 0      # survive on a replica, under-replicated
+    lost_keys: Tuple = ()
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "host": float(self.host),
+            "t_fail": float(self.t_fail),
+            "keys_resident": float(self.keys_resident),
+            "keys_lost": float(self.keys_lost),
+            "bytes_lost": float(self.bytes_lost),
+            "keys_degraded": float(self.keys_degraded),
+        }
 
 
 @dataclasses.dataclass
@@ -292,6 +353,15 @@ class ShardedTieredStore:
         # hosts removed but still carrying queue history (and possibly
         # in-flight egress) for drain/stats and late RemoteFetch waits
         self.retired: Dict[int, Tuple[TieredStore, AsyncTierRuntime]] = {}
+        # hosts lost to unplanned failure: host -> failure time. Unlike
+        # retirement nothing survives — in-flight egress is dead and
+        # RemoteFetch handles fall back to a surviving holder.
+        self.failed: Dict[int, float] = {}
+        self.failures: List[FailureReport] = []
+        # subscriber for lost keys (fabric-external bookkeeping: session
+        # tables, benchmarks); per-host policies with a `forget_keys`
+        # hook are notified regardless
+        self.on_key_loss = None
         self.rebalances: List[RebalanceStats] = []
         # fabric-level counters
         self.local_fetches = 0
@@ -462,7 +532,8 @@ class ShardedTieredStore:
         # completion (flash + NIC), not just the flash leg
         pf.external_done_t = nic_tr.done_t
         self.remote_fetches += 1
-        return RemoteFetch(fabric=self, pf=pf, nic_tr=nic_tr, owner=owner)
+        return RemoteFetch(fabric=self, pf=pf, nic_tr=nic_tr, owner=owner,
+                           dst=from_host)
 
     def get(self, key, from_host: int = 0) -> np.ndarray:
         return self.get_async(key, from_host=from_host).wait()
@@ -482,6 +553,9 @@ class ShardedTieredStore:
         for h in self.holders(key):
             self.hosts[h].delete(key)
         self._key_replicas.pop(key, None)
+        # a deleted key must leave the reuse bookkeeping too: a later
+        # re-put is a first touch, not a measured "reuse" across the gap
+        self._notify_key_loss([key])
 
     def host_view(self, host: int, replicas: int = 1) -> HostView:
         return HostView(self, host, replicas=replicas)
@@ -546,6 +620,86 @@ class ShardedTieredStore:
         rb = self._rebalance("leave", host, extra_sources=(host,))
         self.retired[host] = (self.hosts.pop(host), self.nic.pop(host))
         return rb
+
+    def fail_host(self, host: int) -> FailureReport:
+        """Unplanned failure: the host vanishes NOW — no drain, no
+        retired queues. Keys resident only on it are lost (values gone,
+        `_key_replicas` bookkeeping purged, `on_key_loss` and per-host
+        policy `forget_keys` hooks fire); replicated keys survive on
+        their other holders, and reads route around the dead host via
+        `holders()` ring order (degraded reads).
+
+        Fate-sharing boundary for in-flight transfers: an egress leg of
+        the dead host that had not delivered dies with it (`RemoteFetch`
+        handles re-issue from a surviving holder on wait), while a
+        destination placement already recorded by `ingest` is modeled as
+        durable — once the structural placement exists the bytes are
+        committed to the wire. Restoring the declared replication degree
+        of the surviving under-replicated keys is the repair loop's job
+        (`repro.runtime.repair.RepairLoop`)."""
+        if host not in self.host_ids:
+            raise KeyError(f"host {host} is not active")
+        if self.n_hosts == 1:
+            raise ValueError("cannot fail the last host")
+        t_fail = self.clock.now()
+        store = self.hosts.pop(host)
+        self.nic.pop(host)
+        self.host_ids.remove(host)
+        self._rebuild_ring()
+        self.failed[host] = t_fail
+        # in-flight flows from the dead sender never arrive; stop
+        # counting them toward any destination's incast fan-in
+        self._nic_flows = [f for f in self._nic_flows if f[1] != host]
+        dead_keys = store.keys()
+        lost: List[object] = []
+        bytes_lost = 0
+        degraded = 0
+        for key in dead_keys:
+            if self.holders(key):
+                degraded += 1
+            else:
+                lost.append(key)
+                bytes_lost += store.nbytes_of(key)
+                self._key_replicas.pop(key, None)
+        report = FailureReport(
+            host=host, t_fail=t_fail, keys_resident=len(dead_keys),
+            keys_lost=len(lost), bytes_lost=bytes_lost,
+            keys_degraded=degraded, lost_keys=tuple(lost))
+        self.failures.append(report)
+        self._notify_key_loss(lost)
+        return report
+
+    def under_replicated(self) -> List[object]:
+        """Keys whose live copy set differs from their target placement:
+        below the declared (clamped) replication degree after a failure,
+        or left on non-target hosts by the ring change. Deterministic
+        hash order — the repair loop's stream order."""
+        resident = {k for s in self.hosts.values() for k in s.keys()}
+        out: List[object] = []
+        for key in sorted(resident,
+                          key=lambda k: (self._key_point(k), repr(k))):
+            if set(self.holders(key)) != set(self._targets(key)):
+                out.append(key)
+        return out
+
+    def _notify_key_loss(self, keys: List[object]):
+        """Fan lost/deleted keys out to every distinct per-host policy
+        exposing `forget_keys` (ghost/EMA purge — see the satellite bug:
+        stale last-seen entries turn a post-repair re-admission into a
+        spurious measured reuse interval) and to the `on_key_loss`
+        subscriber."""
+        if not keys:
+            return
+        keys = list(keys)
+        seen = set()
+        for h in self.host_ids:
+            policy = self.hosts[h].policy
+            fk = getattr(policy, "forget_keys", None)
+            if fk is not None and id(policy) not in seen:
+                seen.add(id(policy))
+                fk(keys)
+        if self.on_key_loss is not None:
+            self.on_key_loss(keys)
 
     def _rebalance(self, action: str, host: int,
                    extra_sources: Tuple[int, ...] = ()) -> RebalanceStats:
@@ -673,6 +827,9 @@ class ShardedTieredStore:
             sum(rb.keys_moved for rb in self.rebalances))
         out["rebalance_bytes_moved"] = float(
             sum(rb.bytes_moved for rb in self.rebalances))
+        out["failed_hosts"] = float(len(self.failed))
+        out["keys_lost"] = float(
+            sum(r.keys_lost for r in self.failures))
         return out
 
     def report(self) -> str:

@@ -35,6 +35,16 @@ through the fabric's NIC + remote-flash composition, behind decode when
 `prefetch` is issued with enough lead. The old `fabric=`/`host=`
 constructor dialect still works as a thin deprecated shim.
 
+Session durability (self-healing fleet): with `checkpoint_interval=N`
+every live slot re-puts its KV blob and restart metadata every N decode
+steps (and on every pause). When the engine's host dies unplanned
+(`fabric.fail_host`), a surviving engine adopts the session from
+`checkpoints()` via `restore_checkpoint` — the replicated blob restores
+from a surviving holder and greedy decode deterministically regenerates
+the at-most-N tokens lost since the last checkpoint. `export_session`
+refuses to hand out metadata whose KV blob has no surviving copy (a
+torn session is restarted, never resurrected).
+
 Compile behavior (the splice-jit cache): slot splices — admitting a
 prefilled prompt into a slot, restoring a resumed session's KV block —
 run through module-level jitted functions whose slot index is a
@@ -132,6 +142,7 @@ class DecodeEngine:
                  store: Optional[TieredStore] = None,
                  fabric=None, host: int = 0,
                  clock=None, step_time: float = 0.0,
+                 checkpoint_interval: int = 0,
                  compute_dtype=jnp.float32, greedy: bool = True):
         self.cfg = cfg
         self.params = params
@@ -166,6 +177,12 @@ class DecodeEngine:
         self.kv_stall_time = 0.0        # decode-visible restore stalls
         self._paused: Dict[str, tuple] = {}
         self._pending: Dict[str, object] = {}   # rid -> PendingFetch
+        # periodic session durability: every `checkpoint_interval` decode
+        # steps (0 = off) live slots re-put their KV blob and refresh the
+        # restart metadata below, so an unplanned host failure loses at
+        # most the tokens generated since the last checkpoint
+        self.checkpoint_interval = int(checkpoint_interval)
+        self._checkpoints: Dict[str, tuple] = {}
         self.steps = 0
         # prompt-length bucketing is sound only when no cached sublayer
         # carries recurrent state (pads would advance it) and there is
@@ -259,12 +276,67 @@ class DecodeEngine:
         blob = np.concatenate([np.asarray(l, np.float32).ravel()
                                for l in flat])
         self.store.put(("kv", rid), blob)
-        self._paused[rid] = (req, jax.tree.structure(blk),
-                             [(l.shape, l.dtype) for l in flat],
-                             int(self.lengths[slot]))
+        state = (req, jax.tree.structure(blk),
+                 [(l.shape, l.dtype) for l in flat],
+                 int(self.lengths[slot]))
+        self._paused[rid] = state
+        # a pause is also the freshest durable point for the session
+        self._checkpoints[rid] = state
         self.live[slot] = False
         self.lengths[slot] = 0
         return self.store.tier_of(("kv", rid))
+
+    # -------------------------------------------------------- checkpointing
+    def checkpoint_session(self, rid: str):
+        """Durable snapshot of a *live* session without evicting it: the
+        slot's KV block is re-put to the store under the usual
+        (\"kv\", rid) key (replicated when the store is a fabric view
+        with replicas >= 2) and restart metadata is recorded, but decode
+        keeps running in place. After an unplanned failure of this host,
+        a surviving engine `import_session`s the checkpoint and `resume`s
+        from the checkpointed position — greedy decode regenerates the
+        lost tail deterministically."""
+        slot = next(s for s, r in self.slot_req.items() if r.rid == rid)
+        req = self.slot_req[slot]
+        blk = self._extract_slot(slot)
+        flat = jax.tree.leaves(blk)
+        blob = np.concatenate([np.asarray(l, np.float32).ravel()
+                               for l in flat])
+        self.store.put(("kv", rid), blob)
+        # snapshot the request: later decode steps on this engine must
+        # not mutate the checkpointed token list
+        self._checkpoints[rid] = (
+            dataclasses.replace(req, slot=None,
+                                generated=list(req.generated)),
+            jax.tree.structure(blk), [(l.shape, l.dtype) for l in flat],
+            int(self.lengths[slot]))
+        return self.store.tier_of(("kv", rid))
+
+    def checkpoint_live(self):
+        """Checkpoint every live, unfinished session (slot order)."""
+        rids = [r.rid for s, r in sorted(self.slot_req.items())
+                if self.live[s] and not r.done]
+        for rid in rids:
+            self.checkpoint_session(rid)
+        return rids
+
+    def checkpoints(self) -> Dict[str, tuple]:
+        """rid -> restart state, same tuple format `import_session`
+        takes. What a failover controller reads off a dead engine's
+        last known state (the metadata is tiny and assumed mirrored;
+        the KV blob's durability is the fabric's replication)."""
+        return dict(self._checkpoints)
+
+    def restore_checkpoint(self, rid: str, state=None):
+        """Re-admit a session from its last checkpoint (here or, with
+        `state` from another engine's `checkpoints()`, after failover).
+        Returns the landing slot; the session re-decodes from the
+        checkpointed position."""
+        if state is None:
+            state = self._checkpoints[rid]
+        if rid not in self._paused:
+            self.import_session(rid, state)
+        return self.resume(rid)
 
     def export_session(self, rid: str):
         """Hand a paused session off to another host's engine: returns
@@ -276,7 +348,21 @@ class DecodeEngine:
         # in the background, and waiting here would advance the shared
         # clock for data nobody will consume
         self._pending.pop(rid, None)
-        return self._paused.pop(rid)
+        state = self._paused.pop(rid)
+        # torn-session guard: metadata must never outlive the KV blob.
+        # `tier_of` is a structural check — a mid-flight ingest (readability
+        # -gated restore, repair stream) already has its placement recorded
+        # and any read pays the arrival gate, so exporting it is safe; only
+        # a blob with *no* surviving copy anywhere makes the metadata
+        # unresumable, and handing it out would resurrect a torn session
+        # on some other host.
+        if self.store.tier_of(("kv", rid)) is None:
+            self._paused[rid] = state
+            raise KeyError(
+                f"session {rid!r}: KV blob has no surviving copy; "
+                f"cannot export a torn session")
+        self._checkpoints.pop(rid, None)
+        return state
 
     def import_session(self, rid: str, state):
         """Adopt a session exported by another engine on the same store
@@ -382,6 +468,10 @@ class DecodeEngine:
                 req.done = True
                 self.live[slot] = False
                 del self.slot_req[slot]
+                self._checkpoints.pop(req.rid, None)
+        if (self.checkpoint_interval and self.live.any()
+                and self.steps % self.checkpoint_interval == 0):
+            self.checkpoint_live()
 
     def run(self, requests: List[Request], max_steps: int = 1000):
         """Simple scheduler loop: admit as slots free up, decode until all
