@@ -28,12 +28,125 @@ EmpiricalWorkload for the ProvisionAdvisor's threshold analysis.
 """
 from __future__ import annotations
 
-from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from ..kernels.reuse_sketch.ref import reference_reuse_sketch
+
+
+class _ArrayGhost:
+    """Array-backed ghost state: the key -> row map stays a Python dict
+    (arbitrary keys must hash somewhere), but last-seen times and touch
+    sequence live in flat numpy arrays, so a batch touch is one
+    vectorized pass instead of per-key OrderedDict churn — the
+    difference between 1e3 and 1e6 tracked keys per step.
+
+    Semantics match the old OrderedDict ghost exactly for any batch
+    that fits inside the capacity headroom: first-ever touch measures
+    0.0, a duplicate within one batch measures the 1e-9 floor, and a
+    re-touch measures max(now - last, 1e-9). The one deliberate
+    difference: eviction (FIFO on last touch == smallest touch
+    sequence) is enforced per *batch*, not per element, so a single
+    batch larger than the capacity can measure against entries the
+    element-at-a-time code would already have evicted mid-batch. Size
+    the ghost above the per-step batch (every real config does) and
+    the two are indistinguishable."""
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        cap0 = 1024
+        self._times = np.zeros(cap0, np.float64)
+        self._seq = np.zeros(cap0, np.int64)
+        self._occ = np.zeros(cap0, bool)
+        self._keys: List[object] = [None] * cap0
+        self._row: Dict[object, int] = {}
+        self._free: List[int] = list(range(cap0 - 1, -1, -1))
+        self._next_seq = 0
+
+    def __len__(self) -> int:
+        return len(self._row)
+
+    def __contains__(self, key) -> bool:
+        return key in self._row
+
+    def get(self, key, default=None):
+        r = self._row.get(key)
+        return default if r is None else float(self._times[r])
+
+    def discard(self, key) -> None:
+        r = self._row.pop(key, None)
+        if r is not None:
+            self._occ[r] = False
+            self._keys[r] = None
+            self._free.append(r)
+
+    def _grow(self, need: int) -> None:
+        cap = len(self._times)
+        if need <= cap:
+            return
+        new = cap
+        while new < need:
+            new *= 2
+        pad = new - cap
+        self._times = np.concatenate(
+            [self._times, np.zeros(pad, np.float64)])
+        self._seq = np.concatenate([self._seq, np.zeros(pad, np.int64)])
+        self._occ = np.concatenate([self._occ, np.zeros(pad, bool)])
+        self._keys.extend([None] * pad)
+        self._free.extend(range(new - 1, cap - 1, -1))
+
+    def touch_batch(self, keys: Sequence[object],
+                    now: float) -> np.ndarray:
+        """Touch a batch at one timestamp; returns float32 measured
+        intervals (0.0 where the key was brand new)."""
+        n = len(keys)
+        self._grow(len(self._row) + n)
+        rows = np.empty(n, np.int64)
+        new = np.zeros(n, bool)
+        dup = np.zeros(n, bool)
+        seen = set()
+        for i, key in enumerate(keys):
+            r = self._row.get(key)
+            if r is None:
+                r = self._free.pop()
+                self._row[key] = r
+                self._keys[r] = key
+                self._occ[r] = True
+                self._times[r] = now
+                new[i] = True
+            elif key in seen:
+                dup[i] = True
+            rows[i] = r
+            seen.add(key)
+        iv = np.maximum(now - self._times[rows], 1e-9)
+        iv = np.where(dup, 1e-9, iv)
+        iv = np.where(new, 0.0, iv)
+        # touch order: the key's *last* occurrence in the batch decides
+        # its sequence (OrderedDict move-to-end semantics). Fancy
+        # assignment with duplicate indices has no ordering guarantee,
+        # so pick the last occurrence explicitly via reversed unique.
+        u, pos_rev = np.unique(rows[::-1], return_index=True)
+        self._times[u] = now
+        self._seq[u] = self._next_seq + (n - 1 - pos_rev)
+        self._next_seq += n
+        self._evict()
+        return iv.astype(np.float32)
+
+    def _evict(self) -> None:
+        over = len(self._row) - self.capacity
+        if over <= 0:
+            return
+        occ = np.flatnonzero(self._occ)
+        # smallest touch sequences go; sequences are unique (monotone
+        # counter), so the victim set is deterministic
+        victims = occ[np.argpartition(self._seq[occ], over - 1)[:over]]
+        for r in victims:
+            key = self._keys[int(r)]
+            self._row.pop(key)
+            self._keys[int(r)] = None
+            self._occ[r] = False
+            self._free.append(int(r))
 
 
 class ReuseTracker:
@@ -50,7 +163,9 @@ class ReuseTracker:
         self.use_kernel = use_kernel
         self.hist = np.zeros((max_classes, n_buckets), np.float32)
         self._class_ids: Dict[str, int] = {}
-        self._last_seen: "OrderedDict[object, float]" = OrderedDict()
+        # array-backed ghost; keeps the `_last_seen` name (and len())
+        # the tests and tooling observe
+        self._last_seen = _ArrayGhost(self.ghost_capacity)
         self.observed = 0           # accesses fed in
         self.measured = 0           # of those, with a measured interval
 
@@ -74,13 +189,7 @@ class ReuseTracker:
     def _touch(self, key, now: float) -> float:
         """Update the ghost; returns the measured interval (<= 0 when the
         key is new to the ghost)."""
-        last = self._last_seen.pop(key, None)
-        self._last_seen[key] = now
-        while len(self._last_seen) > self.ghost_capacity:
-            self._last_seen.popitem(last=False)
-        if last is None:
-            return 0.0
-        return max(now - last, 1e-9)
+        return float(self._last_seen.touch_batch([key], now)[0])
 
     def observe(self, key, cls: str, now: float) -> Optional[float]:
         """Single-key path; returns the measured interval or None."""
@@ -90,14 +199,22 @@ class ReuseTracker:
     def observe_batch(self, keys: Sequence[object], classes: Sequence[str],
                       now: float) -> np.ndarray:
         """Feed one step's accesses; returns the measured intervals
-        (<= 0 where the key was a first touch). One sketch update — the
-        Pallas kernel when `use_kernel`, else the bit-identical oracle."""
+        (<= 0 where the key was a first touch). The ghost update is one
+        vectorized `touch_batch`, and the sketch sees one update — the
+        Pallas kernel when `use_kernel`, else the bit-identical oracle.
+        `classes` may be a single string applied to the whole batch, or
+        a precomputed int array of `class_id` values (the zero-Python
+        path for large control planes)."""
         n = len(keys)
-        intervals = np.zeros(n, np.float32)
-        cids = np.empty(n, np.int32)
-        for i, (key, cls) in enumerate(zip(keys, classes)):
-            intervals[i] = self._touch(key, now)
-            cids[i] = self.class_id(cls)
+        if isinstance(classes, str):
+            cids = np.full(n, self.class_id(classes), np.int32)
+        elif (isinstance(classes, np.ndarray)
+                and classes.dtype.kind in "iu"):
+            cids = classes.astype(np.int32)
+        else:
+            cids = np.fromiter((self.class_id(c) for c in classes),
+                               np.int32, count=n)
+        intervals = self._last_seen.touch_batch(keys, now)
         self.observed += n
         self.measured += int((intervals > 0).sum())
         if self.use_kernel:
@@ -122,7 +239,7 @@ class ReuseTracker:
         on evidence about an object that is gone. Class sketch mass is
         untouched — measured history of the *class* remains valid."""
         for key in keys:
-            self._last_seen.pop(key, None)
+            self._last_seen.discard(key)
 
     def seed_prior(self, cls: str, interval: float, weight: float = 1.0):
         """Declared workload prior: add `weight` mass at `interval` to

@@ -24,17 +24,24 @@ def reuse_sketch_update(hist, intervals, class_ids, *, tau0: float,
     """Decayed sketch update for one step's batch.
 
     hist [C, B] float32; intervals [N] float32 (<= 0 slots skipped);
-    class_ids [N] int32. The batch is padded (interval 0, class -1) to a
-    multiple of `batch_pad` so repeated calls with varying N hit one jit
-    cache entry per padded width."""
+    class_ids [N] int32. The batch is padded (interval 0, class -1) to
+    `batch_pad` rounded up to a power of two of it, so a control plane
+    whose per-step batch wanders from 300 to 300k keys compiles
+    O(log(max_n / batch_pad)) programs total instead of one per
+    multiple of `batch_pad` — pad slots carry class -1 and are skipped,
+    so the result is width-independent."""
     hist = jnp.asarray(hist, jnp.float32)
     iv = np.asarray(intervals, np.float32).ravel()
     cls = np.asarray(class_ids, np.int32).ravel()
     if iv.shape != cls.shape:
         raise ValueError("intervals and class_ids must match in length")
     n = int(iv.size)
-    width = max(n, 1) if not batch_pad else \
-        batch_pad * max(1, -(-n // batch_pad))
+    if not batch_pad:
+        width = max(n, 1)
+    else:
+        width = int(batch_pad)
+        while width < n:
+            width *= 2
     pad = width - n
     iv = np.concatenate([iv, np.zeros(pad, np.float32)])
     cls = np.concatenate([cls, np.full(pad, -1, np.int32)])

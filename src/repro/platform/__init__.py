@@ -20,12 +20,14 @@ from .failover import default_failover_spec, run_failover_bench  # noqa: F401
 from .handles import Handle, KvSession  # noqa: F401
 from .roofline_hook import measured_step_time  # noqa: F401
 from .spec import (AutoscaleDecl, HierarchySpec, HostDecl,  # noqa: F401
-                   NetDecl, PolicyDecl, TierDecl, TopologyDecl)
+                   NetDecl, PolicyDecl, SchedulerDecl, TierDecl,
+                   TopologyDecl)
 
 __all__ = [
     "AutoscaleDecision", "AutoscaleDecl", "Autoscaler",
     "Handle", "HierarchySpec", "HostDecl", "KvSession", "NetDecl",
-    "Platform", "PolicyDecl", "TierDecl", "TopologyDecl",
+    "Platform", "PolicyDecl", "SchedulerDecl", "TierDecl",
+    "TopologyDecl",
     "default_autoscale_spec", "default_failover_spec",
     "measured_step_time", "run_autoscale_bench", "run_failover_bench",
 ]

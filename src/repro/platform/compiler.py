@@ -186,6 +186,24 @@ class Platform:
                                         replicas=self.spec.replicas),
             step_time=st, **kw)
 
+    def scheduler(self, cfg, params, rules, *, host: int = 0,
+                  pause_idle_steps: Optional[int] = None,
+                  prefetch_lead=None, **kw):
+        """Continuous-batching scheduler over a fresh engine on `host`
+        (`repro.serving.ContinuousScheduler`): per-step admission,
+        pause-on-idle through the tiered store, prefetch-led resume.
+        Knobs default to the spec's `scheduler` declaration; engine
+        kwargs (`max_slots`, `max_len`, ...) pass through."""
+        from ..serving.scheduler import ContinuousScheduler
+        eng = self.engine(cfg, params, rules, host=host, **kw)
+        decl = self.spec.scheduler
+        return ContinuousScheduler(
+            eng,
+            pause_idle_steps=decl.pause_idle_steps
+            if pause_idle_steps is None else pause_idle_steps,
+            prefetch_lead=decl.prefetch_lead
+            if prefetch_lead is None else prefetch_lead)
+
     # ---------------------------------------------------------- provision
     def advise(self, horizon: Optional[float] = None) -> ProvisionAdvice:
         """Live provisioning guidance from the fleet's measured state."""

@@ -253,6 +253,35 @@ class AutoscaleDecl:
             raise _err(path, "active_window must be positive seconds")
 
 
+@dataclasses.dataclass(frozen=True)
+class SchedulerDecl:
+    """Continuous-batching scheduler knobs
+    (`repro.serving.ContinuousScheduler`, built via
+    `Platform.scheduler`).
+
+    `pause_idle_steps`: inter-turn gaps of at most this many decode
+    steps keep a session *parked* in its slot (resident, not decoding);
+    longer gaps offload the KV through the tiered store — the paper's
+    break-even decision point. 0 always offloads.
+    `prefetch_lead`: "p99" sizes each paused session's restore prefetch
+    from the serving tier's calibrated tail latency; an integer is a
+    fixed lead in decode steps; 0 disables prefetch."""
+    pause_idle_steps: int = 0
+    prefetch_lead: Union[int, str] = "p99"
+
+    def validate(self, path: str = "scheduler"):
+        if self.pause_idle_steps < 0:
+            raise _err(path, f"pause_idle_steps must be >= 0 (got "
+                             f"{self.pause_idle_steps})")
+        if isinstance(self.prefetch_lead, str):
+            if self.prefetch_lead != "p99":
+                raise _err(path, f"prefetch_lead must be 'p99' or a "
+                           f"step count (got {self.prefetch_lead!r})")
+        elif self.prefetch_lead < 0:
+            raise _err(path, f"prefetch_lead must be >= 0 steps (got "
+                             f"{self.prefetch_lead})")
+
+
 PolicyLike = Union[PolicyDecl, Callable[[int], TieringPolicy]]
 
 
@@ -284,6 +313,7 @@ class HierarchySpec:
     checkpoint_interval: Optional[float] = None     # seconds between
     #                                 engine session checkpoints (None=off)
     autoscale: AutoscaleDecl = AutoscaleDecl()
+    scheduler: SchedulerDecl = SchedulerDecl()
 
     def __post_init__(self):
         # normalize list inputs (JSON round-trip hands us lists)
@@ -357,6 +387,7 @@ class HierarchySpec:
             raise _err("checkpoint_interval", "must be positive seconds "
                        "(omit it to disable checkpointing)")
         self.autoscale.validate()
+        self.scheduler.validate()
         if not 0 <= self.autoscale.template < len(self.hosts):
             raise _err("autoscale.template", f"host index "
                        f"{self.autoscale.template} out of range for "
@@ -456,9 +487,12 @@ class HierarchySpec:
         autoscale = d.pop("autoscale", None)
         autoscale = AutoscaleDecl(**autoscale) if autoscale is not None \
             else AutoscaleDecl()
+        scheduler = d.pop("scheduler", None)
+        scheduler = SchedulerDecl(**scheduler) if scheduler is not None \
+            else SchedulerDecl()
         weights = d.pop("weights", None)
         spec = cls(hosts=hosts, policy=policy, topology=topology,
-                   net=net, autoscale=autoscale,
+                   net=net, autoscale=autoscale, scheduler=scheduler,
                    weights=tuple(weights) if weights is not None
                    else None, **d)
         return spec.validate()

@@ -75,7 +75,11 @@ from ..parallel.sharding import Rules
 from ..runtime.tiers import TieredStore
 
 
-@dataclasses.dataclass
+# eq=False: the generated dataclass __eq__ would compare the ndarray
+# prompts elementwise ("truth value of an array is ambiguous" on any two
+# distinct requests) — identity is the only meaningful equality here,
+# and schedulers key on `rid` anyway
+@dataclasses.dataclass(eq=False)
 class Request:
     rid: str
     prompt: np.ndarray            # [S] int32
@@ -155,6 +159,11 @@ class DecodeEngine:
                                           dtype=compute_dtype)
         self.lengths = np.zeros(max_slots, np.int32)    # filled positions
         self.live = np.zeros(max_slots, bool)
+        # parked slots: live (KV resident, slot held) but not decoding —
+        # a scheduler keeps short-gap multi-turn sessions resident
+        # instead of paying the offload/restore round trip
+        self.active = np.zeros(max_slots, bool)
+        self.last_token = np.zeros(max_slots, np.int32)  # decode inputs
         self.slot_req: Dict[int, Request] = {}
         self.policy = policy or TieringPolicy(tau_hot=0.05, tau_be=5.0)
         if store is None and fabric is not None:
@@ -244,10 +253,12 @@ class DecodeEngine:
         self._splice_slot(tmp_cache, slot)
         self.lengths[slot] = S
         self.live[slot] = True
+        self.active[slot] = True
         req.slot = slot
         self.slot_req[slot] = req
         first = int(np.argmax(np.asarray(logits[0]))) if self.greedy else 0
         req.generated.append(first)
+        self.last_token[slot] = first
         return slot
 
     def _splice_slot(self, src_cache, slot: int, src_idx: int = 0):
@@ -266,10 +277,22 @@ class DecodeEngine:
                                  self.cache["tail"]),
         }
 
+    def _slot_of_rid(self, rid: str) -> int:
+        """Slot currently decoding `rid`; KeyError (not a bare
+        StopIteration out of `next`) when the session is not live here —
+        unknown, already paused, or finished."""
+        for s, r in self.slot_req.items():
+            if r.rid == rid:
+                return s
+        state = ("paused" if rid in self._paused else "not live")
+        raise KeyError(f"session {rid!r} is {state} on this engine; "
+                       f"only live sessions can be paused or "
+                       f"checkpointed")
+
     # -------------------------------------------------------------- pausing
     def pause(self, rid: str):
         """Offload a session's KV block through the tiered store."""
-        slot = next(s for s, r in self.slot_req.items() if r.rid == rid)
+        slot = self._slot_of_rid(rid)
         req = self.slot_req.pop(slot)
         blk = self._extract_slot(slot)
         flat = jax.tree.leaves(blk)
@@ -283,8 +306,26 @@ class DecodeEngine:
         # a pause is also the freshest durable point for the session
         self._checkpoints[rid] = state
         self.live[slot] = False
+        self.active[slot] = False
         self.lengths[slot] = 0
         return self.store.tier_of(("kv", rid))
+
+    def park(self, rid: str) -> int:
+        """Idle a live session in place: the slot and its KV stay
+        resident but the slot stops decoding (no token append, no
+        length advance) until `unpark`. Cheaper than `pause`/`resume`
+        for short inter-turn gaps — no offload, no restore stall."""
+        slot = self._slot_of_rid(rid)
+        self.active[slot] = False
+        return slot
+
+    def unpark(self, rid: str) -> int:
+        """Reactivate a parked session; decode picks up exactly where
+        it left off (the parked slot's pending KV position is rewritten
+        by the first real decode)."""
+        slot = self._slot_of_rid(rid)
+        self.active[slot] = True
+        return slot
 
     # -------------------------------------------------------- checkpointing
     def checkpoint_session(self, rid: str):
@@ -296,7 +337,7 @@ class DecodeEngine:
         a surviving engine `import_session`s the checkpoint and `resume`s
         from the checkpointed position — greedy decode regenerates the
         lost tail deterministically."""
-        slot = next(s for s, r in self.slot_req.items() if r.rid == rid)
+        slot = self._slot_of_rid(rid)
         req = self.slot_req[slot]
         blk = self._extract_slot(slot)
         flat = jax.tree.leaves(blk)
@@ -411,6 +452,16 @@ class DecodeEngine:
     def resume(self, rid: str):
         """Re-admit a paused session. Blocks only on the unfinished part
         of its (pre)fetch; the stall lands in `kv_stall_time`."""
+        if rid not in self._paused:
+            raise KeyError(f"session {rid!r} is not paused on this "
+                           f"engine")
+        # secure the slot *before* consuming any session state: the
+        # no-free-slots failure must leave the session fully resumable
+        # (metadata in `_paused`, any issued prefetch still pending)
+        free = self._free_slots()
+        if not free:
+            raise RuntimeError("no free slots")
+        slot = free[0]
         req, treedef, shapes, length = self._paused.pop(rid)
         pf = self._pending.pop(rid, None)
         if pf is None:
@@ -425,48 +476,51 @@ class DecodeEngine:
                 blob[off:off + n].reshape(shape), dtype))
             off += n
         blk = jax.tree.unflatten(treedef, leaves)
-        free = self._free_slots()
-        if not free:
-            raise RuntimeError("no free slots")
-        slot = free[0]
         # traced-slot splice: repeated (cross-host) resumes reuse one
         # compiled program regardless of the landing slot
         self.cache = _splice_block(self.cache, blk,
                                    jnp.asarray(slot, jnp.int32))
         self.lengths[slot] = length
         self.live[slot] = True
+        self.active[slot] = True
+        if req.generated:
+            self.last_token[slot] = req.generated[-1]
         req.slot = slot
         self.slot_req[slot] = req
         return slot
 
     # ---------------------------------------------------------------- step
     def step(self):
-        """One decode step for all live slots."""
-        if not self.live.any():
+        """One decode step for all live, non-parked slots (vectorized
+        across the slot grid: token gather, argmax and length advance
+        are whole-array ops; Python only touches slots that finish this
+        step). Parked and dead slots ride through the fixed-shape decode
+        but their state is masked out — the garbage KV written at their
+        pending position is overwritten by the first real decode after
+        unpark/admit."""
+        act = self.live & self.active
+        if not act.any():
             return
-        tokens = np.zeros((self.max_slots, 1), np.int32)
-        for slot, req in self.slot_req.items():
-            if self.live[slot] and req.generated:
-                tokens[slot, 0] = req.generated[-1]
         idx = jnp.asarray(self.lengths)
         self.cache, logits = self._decode(
-            self.params, token=jnp.asarray(tokens), cache=self.cache,
-            index=idx)
-        logits = np.asarray(logits)
+            self.params, token=jnp.asarray(self.last_token[:, None]),
+            cache=self.cache, index=idx)
         self.steps += 1
         if self.step_time:
             # modeled decode compute overlaps in-flight KV transfers
             self.store.runtime.advance(self.step_time)
+        nxt = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+        self.last_token = np.where(act, nxt, self.last_token)
+        self.lengths[act] += 1
         for slot, req in list(self.slot_req.items()):
-            if not self.live[slot]:
+            if not act[slot]:
                 continue
-            nxt = int(np.argmax(logits[slot]))
-            req.generated.append(nxt)
-            self.lengths[slot] += 1
+            req.generated.append(int(nxt[slot]))
             if (len(req.generated) >= req.max_new
                     or self.lengths[slot] >= self.max_len - 1):
                 req.done = True
                 self.live[slot] = False
+                self.active[slot] = False
                 del self.slot_req[slot]
                 self._checkpoints.pop(req.rid, None)
         if (self.checkpoint_interval and self.live.any()
@@ -474,17 +528,22 @@ class DecodeEngine:
             self.checkpoint_live()
 
     def run(self, requests: List[Request], max_steps: int = 1000):
-        """Simple scheduler loop: admit as slots free up, decode until all
-        requests complete."""
+        """Simple gang scheduler loop: admit as slots free up, decode
+        until all requests complete. Completion is tracked by rid (the
+        old `r not in done` identity scan was O(n^2) per step)."""
         pending = list(requests)
-        done = []
+        done: List[Request] = []
+        done_rids = set()
         steps = 0
         while (pending or self.live.any()) and steps < max_steps:
             while pending and self._free_slots():
                 self.admit(pending.pop(0))
             self.step()
             steps += 1
-            done += [r for r in requests if r.done and r not in done]
+            for r in requests:
+                if r.done and r.rid not in done_rids:
+                    done_rids.add(r.rid)
+                    done.append(r)
         return done
 
 

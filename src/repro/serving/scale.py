@@ -1,0 +1,208 @@
+"""Control-plane scale replay: 1M keys / 100k sessions per fleet step.
+
+"Tearing Down the Memory Wall" (PAPERS.md) argues the host *control
+plane*, not the flash media, is what caps AI-era hierarchies at high
+IOPS — the paper's seconds-scale break-even only matters if routing,
+reuse tracking and admission can keep up with millions of fine-grained
+residency decisions. This module measures exactly that on this repo's
+control plane, post-vectorization:
+
+  * routing: `ShardedTieredStore.owner_batch` (one `searchsorted` over
+    the ring arrays; key digests hashed once and reused every step),
+  * reuse tracking: `ReuseTracker.observe_batch` over the array-backed
+    ghost + one decayed-sketch update per step,
+  * admission + capacity: a vectorized break-even gate (measured
+    interval vs `tau_be`, class-quantile prior for first touches) and
+    an array LRU over the DRAM tier,
+  * stall pricing: the step's queued flash misses priced through
+    `SsdQueueModel.service_total_batch` (a precomputed cumulative
+    depth ladder — no per-fetch model calls).
+
+Wall-clock control-plane cost is timed per section and returned in a
+*separate* record from the modeled results: the modeled record (stall,
+hit rates, op counters) is deterministic for a seed and byte-stable
+across runs — that is what `benchmarks/serving_scale.py` JSON-diffs in
+CI — while the timings depend on the machine and go to stderr.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..autopilot.reuse import ReuseTracker
+from ..runtime.clock import VirtualClock
+from ..runtime.fabric import ShardedTieredStore
+from ..runtime.service import SsdQueueModel
+
+
+def generate_scale_trace(*, n_keys: int, n_sessions: int, n_steps: int,
+                         accesses_per_step: int, turns_per_session: int,
+                         zipf_alpha: float = 3.0,
+                         seed: int = 0) -> List[np.ndarray]:
+    """Seeded per-step access-id arrays over a keyspace of `n_keys`.
+
+    Ids [0, n_sessions) are session KV keys: each session takes
+    `turns_per_session` turns at seeded steps, so its key re-appears at
+    measurable reuse intervals. Ids [n_sessions, n_keys) are one-shot
+    objects drawn with power-law popularity (`zipf_alpha` concentrates
+    mass on the low ids) — the scan-flood-ish background the gate must
+    keep out of DRAM. Everything is drawn up front from one rng, so the
+    trace is a pure function of the arguments."""
+    if n_sessions >= n_keys:
+        raise ValueError("need n_keys > n_sessions")
+    rng = np.random.default_rng(seed)
+    # session turns: uniform start, uniform later turns — bucket by step
+    turn_steps = rng.integers(0, n_steps,
+                              size=(n_sessions, turns_per_session))
+    sess_ids_by_step: List[List[int]] = [[] for _ in range(n_steps)]
+    flat_steps = turn_steps.ravel()
+    flat_sids = np.repeat(np.arange(n_sessions), turns_per_session)
+    order = np.argsort(flat_steps, kind="stable")
+    bounds = np.searchsorted(flat_steps[order],
+                             np.arange(n_steps + 1))
+    steps = []
+    n_obj = n_keys - n_sessions
+    for t in range(n_steps):
+        sess = flat_sids[order[bounds[t]:bounds[t + 1]]]
+        u = rng.random(accesses_per_step)
+        obj = n_sessions + np.minimum(
+            (n_obj * np.power(u, zipf_alpha)).astype(np.int64),
+            n_obj - 1)
+        steps.append(np.concatenate([sess.astype(np.int64), obj]))
+    return steps
+
+
+def scale_replay(*, n_keys: int = 1_000_000, n_sessions: int = 100_000,
+                 n_steps: int = 120, accesses_per_step: int = 50_000,
+                 turns_per_session: int = 3, n_hosts: int = 8,
+                 dram_capacity_keys: Optional[int] = None,
+                 l_blk: int = 128 << 10, tau_be: float = 5.0,
+                 step_time: float = 0.25, zipf_alpha: float = 3.0,
+                 seed: int = 0,
+                 sim_cfg=None) -> Tuple[Dict[str, float],
+                                        Dict[str, float]]:
+    """Replay the scale trace through the vectorized control plane.
+
+    Returns `(record, timings)`: `record` is deterministic (modeled
+    stall, hit/admission counters, per-section op counts) and safe to
+    byte-diff across runs; `timings` is measured wall-clock seconds per
+    control-plane section on this machine (reported separately — never
+    mixed into the modeled numbers)."""
+    if dram_capacity_keys is None:
+        dram_capacity_keys = n_keys // 10
+    trace = generate_scale_trace(
+        n_keys=n_keys, n_sessions=n_sessions, n_steps=n_steps,
+        accesses_per_step=accesses_per_step,
+        turns_per_session=turns_per_session, zipf_alpha=zipf_alpha,
+        seed=seed)
+
+    fabric = ShardedTieredStore(n_hosts, clock=VirtualClock())
+    tracker = ReuseTracker(ghost_capacity=n_keys, n_buckets=32,
+                           tau0=1e-3, decay=0.995, max_classes=4)
+    kv_cid = tracker.class_id("kv")
+    obj_cid = tracker.class_id("obj")
+
+    # one-time digest pass: routing for the rest of the replay is pure
+    # array math (digests survive ring changes)
+    t0 = time.perf_counter()
+    digests = fabric.key_digest_batch(np.arange(n_keys))
+    t_digest = time.perf_counter() - t0
+
+    # flash stall ladder: cumulative cost of n queued misses in a step
+    # (depth ramps 1..d_max as the queue builds, then saturates)
+    model = SsdQueueModel.shared(sim_cfg)
+    d_max = SsdQueueModel.DEPTHS[-1]
+    per_depth = model.service_total_batch(l_blk, np.arange(1, d_max + 1))
+    cum_stall = np.concatenate([[0.0], np.cumsum(per_depth)])
+    sat_cost = float(per_depth[-1])
+
+    resident = np.zeros(n_keys, bool)       # DRAM residency
+    last_access = np.full(n_keys, -1, np.int64)
+    owner_counts = np.zeros(n_hosts, np.int64)
+
+    counters = {"accesses": 0, "ring_lookups": 0, "ghost_touches": 0,
+                "sketch_updates": 0, "admitted": 0, "evicted": 0,
+                "dram_hits": 0, "flash_misses": 0, "first_touches": 0}
+    timings = {"digest": t_digest, "routing": 0.0, "tracking": 0.0,
+               "admission": 0.0, "stall_pricing": 0.0}
+    total_stall = 0.0
+
+    for t, ids in enumerate(trace):
+        n = ids.size
+        now = (t + 1) * step_time
+        counters["accesses"] += n
+
+        w0 = time.perf_counter()
+        owners = fabric.owner_batch(digests=digests[ids])
+        np.add.at(owner_counts, owners, 1)
+        counters["ring_lookups"] += n
+        w1 = time.perf_counter()
+        cids = np.where(ids < n_sessions, kv_cid, obj_cid).astype(np.int32)
+        intervals = tracker.observe_batch(ids.tolist(), cids, now)
+        counters["ghost_touches"] += n
+        counters["sketch_updates"] += 1
+        w2 = time.perf_counter()
+
+        # vectorized break-even admission: measured reuse wins, the
+        # class sketch quantile covers first touches (the EconomicGate
+        # cascade, array-shaped)
+        measured = intervals > 0
+        counters["first_touches"] += int(n - measured.sum())
+        prior = np.empty(2)
+        prior[0] = tracker.class_quantile("kv", 0.5) or np.inf
+        prior[1] = tracker.class_quantile("obj", 0.5) or np.inf
+        est = np.where(measured, intervals,
+                       prior[(ids >= n_sessions).astype(np.int64)])
+        hit = resident[ids]
+        admit = (~hit) & (est < tau_be)
+        resident[ids[admit]] = True
+        last_access[ids] = t
+        # array LRU: one partition evicts everything over capacity
+        over = int(resident.sum()) - dram_capacity_keys
+        if over > 0:
+            rows = np.flatnonzero(resident)
+            victims = rows[np.argpartition(last_access[rows],
+                                           over - 1)[:over]]
+            resident[victims] = False
+            counters["evicted"] += over
+        w3 = time.perf_counter()
+
+        # modeled stall: this step's flash misses queue behind each
+        # other; price the ramp off the precomputed ladder
+        n_miss = int(n - hit.sum())
+        stall = float(cum_stall[min(n_miss, d_max)]
+                      + max(0, n_miss - d_max) * sat_cost)
+        total_stall += stall
+        counters["dram_hits"] += int(hit.sum())
+        counters["flash_misses"] += n_miss
+        counters["admitted"] += int(admit.sum())
+        w4 = time.perf_counter()
+
+        timings["routing"] += w1 - w0
+        timings["tracking"] += w2 - w1
+        timings["admission"] += w3 - w2
+        timings["stall_pricing"] += w4 - w3
+
+    accesses = counters["accesses"]
+    record = {
+        "n_keys": float(n_keys), "n_sessions": float(n_sessions),
+        "n_steps": float(n_steps), "n_hosts": float(n_hosts),
+        "accesses": float(accesses),
+        "dram_capacity_keys": float(dram_capacity_keys),
+        "tau_be": float(tau_be), "step_time": float(step_time),
+        "hit_rate": counters["dram_hits"] / max(accesses, 1),
+        "measured_rate": tracker.measured / max(tracker.observed, 1),
+        "total_stall": total_stall,
+        "per_access_stall": total_stall / max(accesses, 1),
+        "owner_imbalance": float(owner_counts.max()
+                                 / max(owner_counts.mean(), 1e-12)),
+        "ghost_size": float(len(tracker._last_seen)),
+    }
+    for k, v in counters.items():
+        record[f"ops_{k}"] = float(v)
+    timings["total"] = sum(timings.values())
+    timings["keys_per_sec"] = accesses / max(
+        timings["total"] - timings["digest"], 1e-12)
+    return record, timings

@@ -1,0 +1,196 @@
+"""Vectorized control-plane tests: batched ring routing, the
+array-backed ghost, pow2 sketch padding and the batched SSD service
+ladder — each batch path checked value-for-value against its scalar
+(or sequential) reference."""
+import collections
+
+import numpy as np
+import pytest
+
+from repro.autopilot.reuse import ReuseTracker, _ArrayGhost
+from repro.runtime.clock import VirtualClock
+from repro.runtime.fabric import ShardedTieredStore
+from repro.runtime.service import SsdQueueModel
+
+
+# --------------------------------------------------------------- routing
+def _mixed_keys(rng, n):
+    keys = []
+    for i in range(n):
+        pick = i % 3
+        if pick == 0:
+            keys.append(int(rng.integers(0, 1 << 40)))
+        elif pick == 1:
+            keys.append(f"kv-{int(rng.integers(0, 1 << 20))}")
+        else:
+            keys.append(("kv", f"s{int(rng.integers(0, 9999)):04d}"))
+    return keys
+
+
+def test_owner_batch_matches_scalar_weighted_ring():
+    fab = ShardedTieredStore(5, weights=[1.0, 2.0, 1.0, 3.0, 1.0],
+                             clock=VirtualClock())
+    keys = _mixed_keys(np.random.default_rng(0), 600)
+    scalar = np.array([fab.owner(k) for k in keys])
+    assert np.array_equal(fab.owner_batch(keys), scalar)
+
+
+def test_owner_batch_digests_survive_ring_changes():
+    fab = ShardedTieredStore(3, clock=VirtualClock())
+    keys = _mixed_keys(np.random.default_rng(1), 400)
+    digests = fab.key_digest_batch(keys)
+    assert np.array_equal(fab.owner_batch(digests=digests),
+                          [fab.owner(k) for k in keys])
+    fab.add_host()
+    # same digests, new ring: still identical to the scalar path
+    assert np.array_equal(fab.owner_batch(digests=digests),
+                          [fab.owner(k) for k in keys])
+
+
+def test_owner_batch_needs_keys_or_digests():
+    fab = ShardedTieredStore(2, clock=VirtualClock())
+    with pytest.raises(ValueError):
+        fab.owner_batch()
+
+
+# ----------------------------------------------------------------- ghost
+class _SequentialGhost:
+    """The old element-at-a-time OrderedDict ghost, as an oracle."""
+
+    def __init__(self, capacity):
+        self.capacity = capacity
+        self.d = collections.OrderedDict()
+
+    def touch(self, key, now):
+        last = self.d.pop(key, None)
+        self.d[key] = now
+        while len(self.d) > self.capacity:
+            self.d.popitem(last=False)
+        if last is None:
+            return 0.0
+        return max(now - last, 1e-9)
+
+
+def test_array_ghost_matches_sequential_oracle_no_eviction():
+    """In the headroom regime (every real config) the array ghost is
+    byte-identical to the sequential OrderedDict ghost."""
+    g = _ArrayGhost(1 << 16)
+    ref = _SequentialGhost(1 << 16)
+    rng = np.random.default_rng(2)
+    for step in range(300):
+        now = 0.1 * (step + 1)
+        keys = rng.integers(0, 500, size=rng.integers(1, 40)).tolist()
+        got = g.touch_batch(keys, now)
+        want = np.array([ref.touch(k, now) for k in keys], np.float32)
+        # the oracle cannot see within-batch duplicates as duplicates
+        # (it re-touches sequentially) — both measure the 1e-9 floor
+        assert np.array_equal(got, want)
+        assert len(g) == len(ref.d)
+    assert set(ref.d) == {k for k in range(500) if k in g}
+
+
+def test_array_ghost_duplicate_and_first_touch_semantics():
+    g = _ArrayGhost(16)
+    iv = g.touch_batch(["a", "a", "b"], 1.0)
+    assert iv[0] == 0.0 and iv[1] == np.float32(1e-9) and iv[2] == 0.0
+    iv = g.touch_batch(["a"], 3.0)
+    assert iv[0] == np.float32(2.0)
+
+
+def test_array_ghost_fifo_eviction_order():
+    """Batch-1 touches reproduce the old per-element FIFO-on-last-touch
+    eviction exactly (move-to-end on re-touch)."""
+    g = _ArrayGhost(3)
+    for i, k in enumerate(("a", "b", "c")):
+        g.touch_batch([k], float(i + 1))
+    g.touch_batch(["d"], 4.0)                  # a is oldest -> evicted
+    assert "a" not in g and g.get("a") is None
+    g.touch_batch(["b"], 5.0)                  # b moves to the end
+    g.touch_batch(["e"], 6.0)                  # c is now oldest
+    assert "c" not in g
+    assert "b" in g and "d" in g and "e" in g
+    assert len(g) == 3
+
+
+def test_array_ghost_batch_eviction_keeps_most_recent():
+    g = _ArrayGhost(4)
+    g.touch_batch(list(range(10)), 1.0)        # one batch over capacity
+    assert len(g) == 4
+    assert all(k in g for k in (6, 7, 8, 9))   # highest touch sequences
+
+
+def test_array_ghost_discard_and_grow():
+    g = _ArrayGhost(1 << 14)
+    keys = [f"k{i}" for i in range(5000)]      # forces _grow past 1024
+    g.touch_batch(keys, 1.0)
+    assert len(g) == 5000
+    g.discard("k42")
+    g.discard("k42")                           # idempotent
+    assert "k42" not in g and len(g) == 4999
+    assert g.touch_batch(["k42"], 2.0)[0] == 0.0   # truly forgotten
+
+
+def test_tracker_observe_batch_class_array_path():
+    """Pre-computed int class ids give the same sketch and intervals as
+    the string path."""
+    ta = ReuseTracker(ghost_capacity=1 << 12)
+    tb = ReuseTracker(ghost_capacity=1 << 12)
+    kv_a, obj_a = ta.class_id("kv"), ta.class_id("obj")
+    tb.class_id("kv"), tb.class_id("obj")      # same id assignment
+    rng = np.random.default_rng(3)
+    for step in range(20):
+        now = 0.5 * (step + 1)
+        keys = rng.integers(0, 200, size=50).tolist()
+        cls_int = np.where(np.asarray(keys) < 100, kv_a, obj_a)
+        names = ["kv" if k < 100 else "obj" for k in keys]
+        iv_a = ta.observe_batch(keys, cls_int.astype(np.int64), now)
+        iv_b = tb.observe_batch(keys, names, now)
+        assert np.array_equal(iv_a, iv_b)
+    assert np.array_equal(ta.hist, tb.hist)
+    assert ta.measured == tb.measured
+
+
+# ---------------------------------------------------------------- sketch
+def test_sketch_pow2_padding_result_independent():
+    from repro.kernels.reuse_sketch.ops import reuse_sketch_update
+    from repro.kernels.reuse_sketch.ref import reference_reuse_sketch
+
+    rng = np.random.default_rng(4)
+    hist = np.zeros((4, 16), np.float32)
+    for n in (1, 3, 5, 8, 13):
+        iv = rng.random(n).astype(np.float32) * 10.0
+        cls = rng.integers(0, 4, size=n).astype(np.int32)
+        want = reference_reuse_sketch(hist, iv, cls, tau0=1e-3,
+                                      decay=0.99)
+        for pad in (4, 16, 0):       # different widths, same answer
+            got = np.asarray(reuse_sketch_update(
+                hist, iv, cls, tau0=1e-3, decay=0.99, batch_pad=pad))
+            np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+        hist = want
+
+
+# --------------------------------------------------------- service ladder
+def test_service_total_batch_matches_scalar():
+    model = SsdQueueModel.shared()
+    depths = [1, 2, 3, 7, 16, 100, 128, 500]   # on-, off-grid, clipped
+    for nbytes in (4096, 128 << 10, 1 << 20):
+        want = [model.service(nbytes, d).total for d in depths]
+        got = model.service_total_batch(nbytes, depths)
+        np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+# ----------------------------------------------------------- scale replay
+def test_scale_replay_deterministic_and_consistent():
+    from repro.serving.scale import scale_replay
+
+    kw = dict(n_keys=3000, n_sessions=300, n_steps=6,
+              accesses_per_step=400, n_hosts=3, seed=7)
+    rec1, _ = scale_replay(**kw)
+    rec2, timings = scale_replay(**kw)
+    assert rec1 == rec2                        # byte-stable modeled record
+    assert rec1["ops_dram_hits"] + rec1["ops_flash_misses"] \
+        == rec1["accesses"]
+    assert 0.0 <= rec1["hit_rate"] <= 1.0
+    assert rec1["total_stall"] > 0.0
+    assert set(timings) >= {"digest", "routing", "tracking", "admission",
+                            "stall_pricing", "total", "keys_per_sec"}

@@ -1,0 +1,353 @@
+"""Continuous-batching scheduler tests + the serving bug-sweep
+regressions:
+
+  * `resume` with no free slot must fail *without* destroying the
+    paused session (the old code popped `_paused`/`_pending` first),
+  * `pause`/`checkpoint_session` on an unknown or already-paused rid
+    raise KeyError with the session state, not a bare StopIteration,
+  * `Request` equality is identity (eq=False) — the generated
+    dataclass __eq__ died on the ndarray prompt,
+  * `run()` tracks completion by rid set (the O(n^2) identity scan),
+  * park/unpark keeps tokens byte-identical (parked-slot KV garbage is
+    overwritten by the first real decode),
+  * the continuous scheduler emits byte-identical tokens to the
+    lock-step gang reference (greedy decode: scheduling must never
+    change tokens), with a hypothesis property test over random job
+    interleavings — admissions, pauses, parks, prefetches, resumes and
+    an unplanned `fail_host` under replicas=2 — plus flat splice-jit
+    retrace counters across per-step admissions.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.policy import TieringPolicy
+from repro.models import model as M
+from repro.parallel.sharding import single_device_rules
+from repro.runtime.clock import VirtualClock
+from repro.runtime.fabric import ShardedTieredStore
+from repro.runtime.tiers import TieredStore
+from repro.serving.engine import (DecodeEngine, Request,
+                                  splice_trace_counts)
+from repro.serving.scheduler import (ContinuousScheduler, SessionJob,
+                                     Turn, compare_scheduling,
+                                     jobs_from_trace, run_lockstep)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("gemma-2b", reduced=True)
+    rules = single_device_rules()
+    params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, rules, params
+
+
+def _pinned_flash():
+    return TieringPolicy(tau_hot=1e-12, tau_be=1e-9, ema_alpha=1.0)
+
+
+def _engine(cfg, params, rules, *, max_slots=2, store=None,
+            step_time=2e-3):
+    return DecodeEngine(cfg, params, rules, max_slots=max_slots,
+                        max_len=64, policy=_pinned_flash(), store=store,
+                        step_time=step_time)
+
+
+def _reference_generate(cfg, rules, params, prompt, n_new):
+    import jax.numpy as jnp
+    cache = M.init_cache(cfg, 1, 64, dtype=jnp.float32)
+    cache, logits = M.prefill(params, cfg, rules,
+                              {"tokens": jnp.asarray(prompt[None])},
+                              cache, compute_dtype=jnp.float32)
+    out = [int(np.argmax(np.asarray(logits[0])))]
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        cache, logits = M.decode_step(
+            params, cfg, rules, jnp.asarray([[out[-1]]]), cache,
+            jnp.asarray(pos, jnp.int32), compute_dtype=jnp.float32)
+        out.append(int(np.argmax(np.asarray(logits[0]))))
+        pos += 1
+    return out
+
+
+# ------------------------------------------------------------ bug sweep
+def test_resume_with_no_free_slot_preserves_session(setup):
+    """Regression: the failed resume used to pop the session state (and
+    its prefetch) before discovering the grid was full, destroying the
+    session. Now the slot is secured first."""
+    cfg, rules, params = setup
+    rng = np.random.default_rng(10)
+    prompt = rng.integers(1, cfg.vocab, 5).astype(np.int32)
+    ref = _reference_generate(cfg, rules, params, prompt, 8)
+
+    eng = _engine(cfg, params, rules, max_slots=1)
+    req_a = Request(rid="a", prompt=prompt, max_new=8)
+    eng.admit(req_a)
+    for _ in range(3):
+        eng.step()
+    eng.pause("a")
+    req_b = Request(rid="b", prompt=prompt[:4], max_new=4)
+    eng.admit(req_b)                       # the only slot is taken
+    eng.prefetch("a")
+    with pytest.raises(RuntimeError, match="no free slots"):
+        eng.resume("a")
+    # the session survived the failure intact: metadata and the issued
+    # prefetch are still there, and the resume works once a slot frees
+    assert "a" in eng._paused
+    assert "a" in eng._pending
+    while not req_b.done:
+        eng.step()
+    eng.resume("a")
+    while not req_a.done:
+        eng.step()
+    assert req_a.generated == ref
+
+
+def test_pause_and_checkpoint_unknown_rid_raise_keyerror(setup):
+    cfg, rules, params = setup
+    eng = _engine(cfg, params, rules)
+    with pytest.raises(KeyError, match="not live"):
+        eng.pause("ghost")
+    with pytest.raises(KeyError, match="not live"):
+        eng.checkpoint_session("ghost")
+
+    rng = np.random.default_rng(11)
+    req = Request(rid="s",
+                  prompt=rng.integers(1, cfg.vocab, 5).astype(np.int32),
+                  max_new=6)
+    eng.admit(req)
+    eng.step()
+    eng.pause("s")
+    # a paused session is not pausable/checkpointable again — and the
+    # error says *why*, instead of a bare StopIteration out of next()
+    with pytest.raises(KeyError, match="paused"):
+        eng.pause("s")
+    with pytest.raises(KeyError, match="paused"):
+        eng.checkpoint_session("s")
+
+
+def test_request_equality_is_identity():
+    p = np.arange(5, dtype=np.int32)
+    a = Request(rid="r", prompt=p)
+    b = Request(rid="r", prompt=p.copy())
+    # the generated dataclass __eq__ raised "truth value of an array is
+    # ambiguous" here; eq=False makes equality (and hashing) identity
+    assert a == a and a != b
+    assert len({a, b}) == 2
+
+
+def test_run_tracks_completion_by_rid(setup):
+    cfg, rules, params = setup
+    rng = np.random.default_rng(12)
+    eng = _engine(cfg, params, rules, max_slots=2)
+    reqs = [Request(rid=f"r{i}",
+                    prompt=rng.integers(1, cfg.vocab, 4).astype(np.int32),
+                    max_new=3 + i % 3) for i in range(5)]
+    done = eng.run(reqs)
+    assert len(done) == 5                  # each request exactly once
+    assert {r.rid for r in done} == {r.rid for r in reqs}
+    assert all(r.done for r in reqs)
+
+
+def test_park_unpark_token_equivalence(setup):
+    """A parked slot rides through decode steps masked out; its tokens
+    must be unaffected by the garbage KV written at its pending
+    position."""
+    cfg, rules, params = setup
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(1, cfg.vocab, 5).astype(np.int32)
+    ref = _reference_generate(cfg, rules, params, prompt, 8)
+
+    eng = _engine(cfg, params, rules, max_slots=2)
+    req_a = Request(rid="a", prompt=prompt, max_new=8)
+    req_b = Request(rid="b", prompt=prompt[:3], max_new=10)
+    eng.admit(req_a)
+    eng.admit(req_b)
+    for _ in range(3):
+        eng.step()
+    eng.park("a")
+    for _ in range(4):                     # b decodes alone; a idles
+        eng.step()
+    assert len(req_a.generated) == 4       # prefill token + 3 steps
+    eng.unpark("a")
+    while not (req_a.done and req_b.done):
+        eng.step()
+    assert req_a.generated == ref
+
+
+# ----------------------------------------------------------- scheduler
+def test_continuous_matches_lockstep_on_trace_jobs(setup):
+    cfg, rules, params = setup
+    cell = compare_scheduling(
+        lambda: _engine(cfg, params, rules, max_slots=3),
+        lambda: jobs_from_trace("zipf", n_jobs=5, n_turns=2,
+                                tokens_per_turn=4, vocab=cfg.vocab,
+                                horizon=48, seed=0),
+        pause_idle_steps=4)
+    assert cell["tokens_identical"], cell["token_mismatches"]
+    assert cell["continuous"]["tokens"] == cell["lockstep"]["tokens"]
+    assert cell["continuous_wins"], (cell["throughput_ratio"],
+                                     cell["stall_ratio"])
+
+
+def test_scheduler_parks_short_gaps_and_preempts_for_admissions(setup):
+    cfg, rules, params = setup
+    rng = np.random.default_rng(14)
+    eng = _engine(cfg, params, rules, max_slots=1)
+    sched = ContinuousScheduler(eng, pause_idle_steps=8,
+                                prefetch_lead=0)
+    mk = lambda n: rng.integers(1, cfg.vocab, n).astype(np.int32)
+    # x's inter-turn gap is short -> parks; y then needs the only slot
+    # while x is parked -> preemption offloads x through the store
+    x = SessionJob(sid="x", prompt=mk(5),
+                   turns=[Turn(due_step=0, max_new=3),
+                          Turn(due_step=9, max_new=3)])
+    y = SessionJob(sid="y", prompt=mk(4),
+                   turns=[Turn(due_step=4, max_new=3)])
+    rep = sched.run([x, y], max_ticks=200)
+    assert x.state == "done" and y.state == "done"
+    assert rep["parks"] >= 1
+    assert rep["preempt_pauses"] >= 1
+    assert rep["resumes"] >= 1
+    assert len(x.request.generated) == 6
+    assert len(y.request.generated) == 3
+
+
+def test_platform_scheduler_uses_spec_knobs(setup):
+    from repro.platform import (HierarchySpec, Platform, PolicyDecl,
+                                SchedulerDecl)
+    cfg, rules, params = setup
+    spec = HierarchySpec(policy=PolicyDecl.pinned_flash(),
+                         step_time=2e-3,
+                         scheduler=SchedulerDecl(pause_idle_steps=3,
+                                                 prefetch_lead=2))
+    plat = Platform.compile(spec)
+    sched = plat.scheduler(cfg, params, rules, max_slots=2, max_len=64)
+    assert isinstance(sched, ContinuousScheduler)
+    assert sched.pause_idle_steps == 3
+    assert sched.prefetch_lead == 2
+    assert sched.engine.step_time == 2e-3
+    # per-call override beats the declaration
+    sched2 = plat.scheduler(cfg, params, rules, pause_idle_steps=0,
+                            prefetch_lead="p99", max_slots=2,
+                            max_len=64)
+    assert sched2.pause_idle_steps == 0
+    assert sched2.prefetch_lead == "p99"
+
+
+def test_scheduler_decl_validation():
+    from repro.platform import HierarchySpec, SchedulerDecl
+    spec = HierarchySpec(scheduler=SchedulerDecl(pause_idle_steps=4,
+                                                 prefetch_lead=2))
+    assert HierarchySpec.from_json(spec.to_json()) == spec
+    with pytest.raises(ValueError, match="pause_idle_steps"):
+        HierarchySpec(
+            scheduler=SchedulerDecl(pause_idle_steps=-1)).validate()
+    with pytest.raises(ValueError, match="prefetch_lead"):
+        HierarchySpec(
+            scheduler=SchedulerDecl(prefetch_lead="p50")).validate()
+
+
+# ----------------------------------------------------- property testing
+@pytest.fixture(scope="module")
+def prop_engines(setup):
+    """Two engines (continuous arm, lock-step arm) reused across
+    property examples — per-engine jit is the expensive part; state is
+    reset per example."""
+    cfg, rules, params = setup
+    mk = lambda: DecodeEngine(cfg, params, rules, max_slots=3,
+                              max_len=64, step_time=2e-3)
+    return mk(), mk()
+
+
+def _reset(eng, store):
+    eng.cache = M.init_cache(eng.cfg, eng.max_slots, eng.max_len,
+                             dtype=eng.dtype)
+    eng.lengths[:] = 0
+    eng.live[:] = False
+    eng.active[:] = False
+    eng.last_token[:] = 0
+    eng.slot_req.clear()
+    eng._paused.clear()
+    eng._pending.clear()
+    eng._checkpoints.clear()
+    eng.kv_stall_time = 0.0
+    eng.steps = 0
+    eng.store = store
+    eng.clock = store.clock
+
+
+def _draw_jobs(rng, vocab):
+    """Job specs as plain data, materialized twice (one list per arm)."""
+    specs = []
+    for i in range(int(rng.integers(2, 5))):
+        prompt = rng.integers(1, vocab, 5).astype(np.int32)
+        turns, prev = [], int(rng.integers(0, 6)) - 1
+        for _ in range(int(rng.integers(1, 4))):
+            new = int(rng.integers(2, 7))
+            due = prev + new + int(rng.integers(1, 7))
+            turns.append((due, new, int(rng.integers(0, 5))))
+            prev = due
+        specs.append((f"s{i}", prompt, turns))
+    def make():
+        return [SessionJob(sid=s, prompt=p.copy(),
+                           turns=[Turn(due_step=d, max_new=n,
+                                       deadline_steps=dl)
+                                  for d, n, dl in t])
+                for s, p, t in specs]
+    return make
+
+
+_SPLICE_WARM = []
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=0, max_value=1_000_000))
+def test_scheduler_interleaving_property(prop_engines, seed):
+    """Random multi-turn job sets under random scheduler knobs, with an
+    unplanned mid-run host failure (replicas=2) on the continuous arm:
+    tokens must be byte-identical to the lock-step reference per
+    session, every job must complete, and the splice-jit programs must
+    not retrace across the run's per-step admissions/resumes."""
+    cont_eng, lock_eng = prop_engines
+    rng = np.random.default_rng(seed)
+    make_jobs = _draw_jobs(rng, cont_eng.cfg.vocab)
+    pause_idle = int(rng.integers(0, 7))
+    lead = ["p99", 0, 2][int(rng.integers(0, 3))]
+    do_fail = bool(rng.integers(0, 2))
+    fail_tick = int(rng.integers(2, 16))
+
+    before = splice_trace_counts()
+
+    fabric = ShardedTieredStore(2, clock=VirtualClock())
+    _reset(cont_eng, fabric.host_view(0, replicas=2))
+    sched = ContinuousScheduler(cont_eng, pause_idle_steps=pause_idle,
+                                prefetch_lead=lead)
+    cont_jobs = make_jobs()
+    sched.submit_all(cont_jobs)
+    failed = False
+    while sched.pending_work() and sched.metrics["ticks"] < 600:
+        if do_fail and not failed and sched.metrics["ticks"] == fail_tick:
+            fabric.fail_host(1)      # replicas=2: every KV blob survives
+            failed = True
+        sched.tick()
+    assert not sched.pending_work()
+
+    _reset(lock_eng, TieredStore(_pinned_flash(), clock=VirtualClock()))
+    lock_jobs = make_jobs()
+    run_lockstep(lock_eng, lock_jobs, max_ticks=600)
+
+    lock_by_sid = {j.sid: list(j.request.generated) for j in lock_jobs}
+    for j in cont_jobs:
+        assert j.state == "done"
+        assert list(j.request.generated) == lock_by_sid[j.sid], j.sid
+        assert len(j.request.generated) == j.total()
+
+    after = splice_trace_counts()
+    if _SPLICE_WARM:
+        # past the first example both splice programs are compiled for
+        # this cache geometry: per-step admission must never retrace
+        assert after == before, (before, after)
+    _SPLICE_WARM.append(1)
