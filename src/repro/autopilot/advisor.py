@@ -51,6 +51,15 @@ class ProvisionAdvice:
     classes: Dict[str, Dict[str, float]]
     rebalance: Optional[Dict[str, float]] = None
 
+    @property
+    def bandwidth_limited(self) -> bool:
+        """True when the binding constraint is a *bandwidth* threshold
+        (T_B: DRAM wire, T_S: SSD lanes) rather than capacity — more
+        bytes on the same hosts won't help; more hosts (more spindles
+        and DRAM channels) will. `Autoscaler` folds this verdict into
+        its add/remove decisions."""
+        return self.limit in ("dram-bandwidth", "ssd-bandwidth")
+
     def as_dict(self) -> Dict[str, object]:
         d = dataclasses.asdict(self)
         return {k: v for k, v in d.items() if v is not None}

@@ -34,7 +34,7 @@ into `TieredStore`, `ShardedTieredStore`, `DecodeEngine` and
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
@@ -72,13 +72,25 @@ class EconomicGate(TieringPolicy):
                  tracker: Optional[ReuseTracker] = None,
                  classify: Callable[[object], str] = default_classify,
                  prior_quantile: float = 0.5,
-                 hysteresis: float = 0.25, ema_alpha: float = 0.2):
+                 hysteresis: float = 0.25, ema_alpha: float = 0.2,
+                 class_tau_be: Optional[Dict[str, float]] = None):
         super().__init__(tau_hot=tau_hot, tau_be=tau_be,
                          hysteresis=hysteresis, ema_alpha=ema_alpha)
         self.tracker = tracker or ReuseTracker()
         self.classify = classify
         self.prior_quantile = prior_quantile
         self.gate_stats = GateStats()
+        # per-class (per-tenant) break-even overrides: a class's SLO
+        # alpha_stall folds into its own tau_be (see `breakeven_tau`);
+        # classes not listed fall back to the fleet-wide threshold
+        self.class_tau_be = dict(class_tau_be) if class_tau_be else None
+
+    def tau_for(self, key) -> float:
+        """Break-even threshold governing `key`: its class's declared
+        per-tenant tau_be when one exists, else the fleet-wide value."""
+        if not self.class_tau_be:
+            return self.tau_be
+        return self.class_tau_be.get(self.classify(key), self.tau_be)
 
     # ------------------------------------------------------------ tracking
     def observe(self, key, now: Optional[float] = None) -> Tier:
@@ -125,7 +137,7 @@ class EconomicGate(TieringPolicy):
             st.prior_decisions += 1
         elif source == "none":
             st.cold_defaults += 1
-        if est is not None and est < self.tau_be:
+        if est is not None and est < self.tau_for(key):
             decided = Tier.DRAM
             st.admits_dram += 1
         else:
@@ -136,6 +148,33 @@ class EconomicGate(TieringPolicy):
         decided = Tier(max(decided, requested))
         self._tier[key] = decided
         return decided
+
+    def tier_of(self, key) -> Tier:
+        """Resident placement under the key's *own* class threshold
+        when per-class tau_be overrides exist — same EMA + hysteresis
+        discipline as the inherited logic, so a premium class's wider
+        tau keeps its re-observed keys in DRAM where the fleet-wide
+        threshold would demote them."""
+        tau_be = self.tau_for(key)
+        if tau_be == self.tau_be:
+            return super().tier_of(key)
+        ema = self._ema.get(key)
+        if ema is None:
+            return self._tier.setdefault(key, Tier.DRAM)
+        cur = self._tier.get(key, Tier.DRAM)
+        want = Tier.HBM if ema < self.tau_hot else (
+            Tier.DRAM if ema < tau_be else Tier.FLASH)
+        if want == cur:
+            self._tier[key] = cur
+            return cur
+        h = 1.0 + self.hysteresis
+        boundary = self.tau_hot if min(want, cur) == Tier.HBM else tau_be
+        if want > cur and ema > boundary * h:
+            cur = Tier(cur + 1)
+        elif want < cur and ema < boundary / h:
+            cur = Tier(cur - 1)
+        self._tier[key] = cur
+        return cur
 
     def forget_keys(self, keys) -> None:
         """Key loss purges both the inherited placement state and the
@@ -166,6 +205,25 @@ class EconomicGate(TieringPolicy):
         return keys[:limit] if limit else keys
 
     # -------------------------------------------------------- constructors
+    @staticmethod
+    def breakeven_tau(host: HostConfig, ssd: SsdConfig, l_blk: float, *,
+                      gamma_rw: float = 9.0, phi_wa: float = 3.0,
+                      iops_ssd: Optional[float] = None,
+                      alpha_stall: float = 0.0,
+                      fetch_seconds: float = 0.0) -> float:
+        """Eq. 1 tau_be with the AI-era stall correction folded in (see
+        `from_break_even`). Exposed separately so per-tenant thresholds
+        — one tau per declared SLO `alpha_stall` — price through the
+        identical formula."""
+        tau_be = float(break_even_for_ssd(host, ssd, l_blk,
+                                          gamma_rw=gamma_rw,
+                                          phi_wa=phi_wa,
+                                          iops_ssd=iops_ssd))
+        if alpha_stall and fetch_seconds:
+            rent_rate = l_blk * host.alpha_h_dram / host.c_h_dram_die
+            tau_be += alpha_stall * fetch_seconds / rent_rate
+        return tau_be
+
     @classmethod
     def from_break_even(cls, host: HostConfig, ssd: SsdConfig,
                         l_blk: float, *, gamma_rw: float = 9.0,
@@ -190,13 +248,10 @@ class EconomicGate(TieringPolicy):
 
         which widens the DRAM set exactly as much as stalled-accelerator
         time is worth."""
-        tau_be = float(break_even_for_ssd(host, ssd, l_blk,
-                                          gamma_rw=gamma_rw,
-                                          phi_wa=phi_wa,
-                                          iops_ssd=iops_ssd))
-        if alpha_stall and fetch_seconds:
-            rent_rate = l_blk * host.alpha_h_dram / host.c_h_dram_die
-            tau_be += alpha_stall * fetch_seconds / rent_rate
+        tau_be = cls.breakeven_tau(host, ssd, l_blk, gamma_rw=gamma_rw,
+                                   phi_wa=phi_wa, iops_ssd=iops_ssd,
+                                   alpha_stall=alpha_stall,
+                                   fetch_seconds=fetch_seconds)
         if tau_hot is None:
             tau_hot = tau_be / 50.0
         return cls(tau_hot=min(tau_hot, tau_be), tau_be=tau_be, **kw)

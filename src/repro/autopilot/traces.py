@@ -115,3 +115,13 @@ def generate(name: str, *, n_steps: int = 240, step_time: float = 0.25,
             steps.append(step)
 
     return Trace(name=name, step_time=step_time, steps=steps)
+
+
+def from_workload(decl, *, step_time: float = 0.25,
+                  name: str = "workload") -> Trace:
+    """Render a declared multi-tenant scenario (`WorkloadDecl`, see
+    `repro.platform.spec`) as an access trace: keys are `(tenant, id)`
+    tuples, so the per-class sketch learns separate per-tenant priors —
+    the declared counterpart of the hand-coded shapes above."""
+    from ..platform.workload import compile_workload
+    return compile_workload(decl).trace(step_time=step_time, name=name)

@@ -125,8 +125,16 @@ class TieringPolicy:
         """Keys in `tier` with the stalest EMA — demotion order."""
         now = time.monotonic() if now is None else now
         keys = [k for k, t in self._tier.items() if t == tier]
-        keys.sort(key=lambda k: -(self._ema.get(k) or
-                                  now - self._last_seen.get(k, now)))
+
+        def staleness(k):
+            # explicit None check: `ema or fallback` would treat a
+            # legitimate 0.0 EMA (maximally hot) as "no EMA" and rank
+            # the key by its idle gap — i.e. evict it first
+            ema = self._ema.get(k)
+            return ema if ema is not None \
+                else now - self._last_seen.get(k, now)
+
+        keys.sort(key=lambda k: -staleness(k))
         return keys[:limit] if limit else keys
 
     # ---- constructors --------------------------------------------------------

@@ -19,15 +19,20 @@ from .compiler import Platform  # noqa: F401
 from .failover import default_failover_spec, run_failover_bench  # noqa: F401
 from .handles import Handle, KvSession  # noqa: F401
 from .roofline_hook import measured_step_time  # noqa: F401
-from .spec import (AutoscaleDecl, HierarchySpec, HostDecl,  # noqa: F401
-                   NetDecl, PolicyDecl, SchedulerDecl, TierDecl,
-                   TopologyDecl)
+from .spec import (ArrivalDecl, AutoscaleDecl,  # noqa: F401
+                   HierarchySpec, HostDecl, NetDecl, PolicyDecl,
+                   SchedulerDecl, SessionShapeDecl, SloDecl, TenantDecl,
+                   TierDecl, TopologyDecl, WorkloadDecl)
+from .workload import (CompiledWorkload, compile_workload,  # noqa: F401
+                       tenant_classifier)
 
 __all__ = [
-    "AutoscaleDecision", "AutoscaleDecl", "Autoscaler",
-    "Handle", "HierarchySpec", "HostDecl", "KvSession", "NetDecl",
-    "Platform", "PolicyDecl", "SchedulerDecl", "TierDecl",
-    "TopologyDecl",
-    "default_autoscale_spec", "default_failover_spec",
-    "measured_step_time", "run_autoscale_bench", "run_failover_bench",
+    "ArrivalDecl", "AutoscaleDecision", "AutoscaleDecl", "Autoscaler",
+    "CompiledWorkload", "Handle", "HierarchySpec", "HostDecl",
+    "KvSession", "NetDecl", "Platform", "PolicyDecl", "SchedulerDecl",
+    "SessionShapeDecl", "SloDecl", "TenantDecl", "TierDecl",
+    "TopologyDecl", "WorkloadDecl",
+    "compile_workload", "default_autoscale_spec",
+    "default_failover_spec", "measured_step_time",
+    "run_autoscale_bench", "run_failover_bench", "tenant_classifier",
 ]

@@ -96,8 +96,22 @@ class Autoscaler:
                                   f"exceeds fleet DRAM "
                                   f"{cap/2**20:.1f}MiB",
                                   rebalance=rb.as_dict())
+        elif advice.bandwidth_limited and cur < self.decl.max_hosts:
+            # capacity covers the hot set but the binding constraint is
+            # a bandwidth threshold (T_B: DRAM wire, T_S: SSD lanes) —
+            # more bytes on the same hosts won't help; more hosts
+            # (spindles + DRAM channels) spread the demand
+            rb = self.platform.add_host()
+            self._last_change = step
+            d = AutoscaleDecision(step, "add", fabric.n_hosts, rec,
+                                  f"{advice.limit}-limited "
+                                  f"(T_B={advice.t_b:.3g}s "
+                                  f"T_S={advice.t_s:.3g}s): adding a "
+                                  f"host to spread bandwidth demand",
+                                  rebalance=rb.as_dict())
         elif (cur > self.decl.min_hosts
-                and cap - dram_cap(victim) >= target):
+                and cap - dram_cap(victim) >= target
+                and not advice.bandwidth_limited):
             rb = fabric.remove_host(victim)
             self._last_change = step
             d = AutoscaleDecision(step, "remove", fabric.n_hosts, rec,
@@ -107,7 +121,11 @@ class Autoscaler:
                                   rebalance=rb.as_dict())
         else:
             d = AutoscaleDecision(step, "hold", cur, rec,
-                                  "fleet capacity matches the target")
+                                  "fleet capacity matches the target"
+                                  if not advice.bandwidth_limited else
+                                  f"{advice.limit}-limited but at "
+                                  f"max_hosts={self.decl.max_hosts}; "
+                                  f"holding")
         self.decisions.append(d)
         return d
 

@@ -58,6 +58,7 @@ class Platform:
         self.advisor = advisor
         self.step_time = step_time
         self._autoscaler = None
+        self._workload = None
 
     # ------------------------------------------------------------- compile
     @classmethod
@@ -81,25 +82,57 @@ class Platform:
                                      ema_alpha=_d.ema_alpha)
         else:
             host_cfg, ssd = decl.economics()
+            workload = spec.workload
+            tenants = workload.tenants if workload is not None else ()
             # one fleet-wide tracker: every host's gate feeds it, the
             # advisor reads the whole workload's reuse histograms
-            tracker = ReuseTracker()
-            for cls_name, interval in sorted(spec.class_priors.items()):
-                tracker.seed_prior(cls_name, interval)
+            tracker = ReuseTracker(max_classes=max(8, len(tenants) + 4))
             fetch_seconds = 0.0
-            if decl.alpha_stall:
+            if decl.alpha_stall or any(t.slo.alpha_stall
+                                       for t in tenants):
                 # price the miss the way the cost model does: the
                 # modeled demand-fetch time at depth 1
                 fetch_seconds = SsdQueueModel.shared(sim_cfg).service(
                     decl.l_blk, 1).total
 
+            # declared workload -> per-tenant SLO economics: each
+            # tenant's alpha_stall folds into its *own* tau_be, its key
+            # class is the tenant name, and its declared think gap
+            # seeds the tracker prior so the very first offload is
+            # priced by the declaration, not the cold default.
+            # isolation="shared" is the control arm: one fleet-wide
+            # threshold/class, no declared priors
+            classify = None
+            class_tau_be = None
+            priors = dict(spec.class_priors)
+            if tenants and workload.isolation == "per-tenant":
+                from .workload import tenant_classifier
+                classify = tenant_classifier([t.name for t in tenants])
+                class_tau_be = {
+                    t.name: EconomicGate.breakeven_tau(
+                        host_cfg, ssd, decl.l_blk,
+                        gamma_rw=decl.gamma_rw, phi_wa=decl.phi_wa,
+                        alpha_stall=t.slo.alpha_stall,
+                        fetch_seconds=fetch_seconds)
+                    for t in tenants}
+                st = spec.resolved_step_time()
+                if st > 0:
+                    for t in tenants:
+                        priors.setdefault(t.name,
+                                          t.session.gap_steps * st)
+            for cls_name, interval in sorted(priors.items()):
+                tracker.seed_prior(cls_name, interval)
+
             def factory(_h, _d=decl, _t=tracker, _f=fetch_seconds,
-                        _host=host_cfg, _ssd=ssd):
+                        _host=host_cfg, _ssd=ssd, _c=classify,
+                        _taus=class_tau_be):
+                kw = {} if _c is None else {"classify": _c}
                 return EconomicGate.from_break_even(
                     _host, _ssd, _d.l_blk, gamma_rw=_d.gamma_rw,
                     phi_wa=_d.phi_wa, alpha_stall=_d.alpha_stall,
                     fetch_seconds=_f, tracker=_t,
-                    prior_quantile=_d.prior_quantile)
+                    prior_quantile=_d.prior_quantile,
+                    class_tau_be=_taus, **kw)
 
         topology = spec.topology.compile() if spec.topology is not None \
             else None
@@ -203,6 +236,27 @@ class Platform:
             if pause_idle_steps is None else pause_idle_steps,
             prefetch_lead=decl.prefetch_lead
             if prefetch_lead is None else prefetch_lead)
+
+    # ------------------------------------------------------------ workload
+    def workload(self):
+        """Compiled rendering of `spec.workload`
+        (`repro.platform.workload.CompiledWorkload`): tenant-tagged
+        jobs, access traces, per-tenant thresholds. Cached — every
+        call sees the same deterministic draw."""
+        if self.spec.workload is None:
+            raise ValueError(
+                "spec declares no workload: set HierarchySpec.workload "
+                "(a WorkloadDecl with at least one tenant) to compile "
+                "scenario jobs/traces from the spec")
+        if self._workload is None:
+            from .workload import compile_workload
+            self._workload = compile_workload(self.spec.workload)
+        return self._workload
+
+    def jobs(self, *, vocab: int = 64):
+        """Declared-scenario `SessionJob` list for `self.scheduler(...)`
+        — tenant-tagged, deterministic in (spec JSON, workload seed)."""
+        return self.workload().jobs(vocab=vocab)
 
     # ---------------------------------------------------------- provision
     def advise(self, horizon: Optional[float] = None) -> ProvisionAdvice:

@@ -282,6 +282,256 @@ class SchedulerDecl:
                              f"{self.prefetch_lead})")
 
 
+@dataclasses.dataclass(frozen=True)
+class ArrivalDecl:
+    """When a tenant's sessions (and background objects) show up.
+
+    `kind` shapes a per-step arrival intensity over the workload
+    horizon: "stationary" is flat, "scan_flood" is a low baseline with
+    periodic full-rate bursts (`period`/`burst_len`), "diurnal" is a
+    raised-cosine day curve (`period` = one day in steps), and
+    "flash_crowd" is a low baseline with one spike of `burst_len` steps
+    centered on `peak_step` (default mid-horizon). Session start steps
+    are drawn from the normalized intensity; `background_per_step`
+    objects per step (scaled by the same intensity) model side traffic —
+    drawn zipf-`background_zipf` from a `background_pool` keyspace, or
+    fresh one-touch keys when the pool is 0 (the scan shape)."""
+    kind: str = "stationary"
+    period: int = 48
+    burst_len: int = 8
+    peak_step: Optional[int] = None
+    baseline: float = 0.1
+    background_per_step: int = 0
+    background_pool: int = 0
+    background_zipf: float = 3.0
+
+    KINDS = ("stationary", "scan_flood", "diurnal", "flash_crowd")
+
+    def validate(self, path: str):
+        if self.kind not in self.KINDS:
+            raise _err(path, f"unknown arrival kind {self.kind!r}; one "
+                             f"of {self.KINDS}")
+        if self.period < 1 or self.burst_len < 1:
+            raise _err(path, f"period/burst_len must be >= 1 step (got "
+                             f"{self.period}/{self.burst_len})")
+        if self.peak_step is not None and self.peak_step < 0:
+            raise _err(path, "peak_step must be >= 0")
+        if not 0.0 <= self.baseline <= 1.0:
+            raise _err(path, f"baseline must be in [0, 1] (got "
+                             f"{self.baseline!r})")
+        if self.background_per_step < 0 or self.background_pool < 0:
+            raise _err(path, "background_per_step/background_pool must "
+                             "be >= 0")
+        if self.background_zipf <= 0:
+            raise _err(path, "background_zipf must be positive")
+
+    def intensity(self, n_steps: int) -> "np.ndarray":
+        """Per-step arrival mass over `n_steps`, values in (0, 1]."""
+        import numpy as np
+        t = np.arange(n_steps)
+        if self.kind == "stationary":
+            return np.ones(n_steps)
+        if self.kind == "scan_flood":
+            mass = np.full(n_steps, self.baseline)
+            mass[(t % self.period) < self.burst_len] = 1.0
+            return mass
+        if self.kind == "diurnal":
+            day = 0.5 - 0.5 * np.cos(2 * np.pi * t / max(self.period, 1))
+            return self.baseline + (1.0 - self.baseline) * day
+        # flash_crowd
+        peak = self.peak_step if self.peak_step is not None \
+            else n_steps // 2
+        mass = np.full(n_steps, self.baseline)
+        half = self.burst_len // 2
+        mass[max(0, peak - half):peak + self.burst_len - half] = 1.0
+        return mass
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionShapeDecl:
+    """One session class: turn count, token/prompt shape and think-time.
+
+    `gap_steps` is the declared mean inter-turn think gap in decode
+    steps (jittered by `gap_jitter`); it doubles as the tenant's
+    declared reuse interval, which `Platform.compile` seeds into the
+    `ReuseTracker` prior so a tenant's very first KV offload is priced
+    from its declaration instead of the cold default.
+    `extra_keys_per_turn` models per-turn side reads (RAG corpus
+    lookups when `extra_key_pool` > 0, fresh scan keys when 0)."""
+    n_turns: int = 3
+    tokens_per_turn: int = 6
+    prompt_len: int = 5
+    gap_steps: int = 4
+    gap_jitter: float = 0.5
+    extra_keys_per_turn: int = 0
+    extra_key_pool: int = 0
+    extra_zipf: float = 1.5
+
+    def validate(self, path: str):
+        if self.n_turns < 1:
+            raise _err(path, f"n_turns must be >= 1 (got {self.n_turns})")
+        if self.tokens_per_turn < 1:
+            raise _err(path, f"tokens_per_turn must be >= 1 (got "
+                             f"{self.tokens_per_turn})")
+        if self.prompt_len < 1:
+            raise _err(path, f"prompt_len must be >= 1 (got "
+                             f"{self.prompt_len})")
+        if self.gap_steps < 1:
+            raise _err(path, f"gap_steps must be >= 1 (got "
+                             f"{self.gap_steps})")
+        if not 0.0 <= self.gap_jitter < 1.0:
+            raise _err(path, f"gap_jitter must be in [0, 1) (got "
+                             f"{self.gap_jitter!r})")
+        if self.extra_keys_per_turn < 0 or self.extra_key_pool < 0:
+            raise _err(path, "extra_keys_per_turn/extra_key_pool must "
+                             "be >= 0")
+        if self.extra_zipf <= 0:
+            raise _err(path, "extra_zipf must be positive")
+
+    # ------------------------------------------------- session-class presets
+    @classmethod
+    def chat(cls, **kw) -> "SessionShapeDecl":
+        """Interactive multi-turn chat: short gaps, modest tokens."""
+        return cls(**{**dict(n_turns=3, tokens_per_turn=6, prompt_len=5,
+                             gap_steps=3), **kw})
+
+    @classmethod
+    def rag(cls, **kw) -> "SessionShapeDecl":
+        """Retrieval-augmented: long prompts + per-turn corpus reads."""
+        return cls(**{**dict(n_turns=2, tokens_per_turn=8, prompt_len=12,
+                             gap_steps=5, extra_keys_per_turn=4,
+                             extra_key_pool=256), **kw})
+
+    @classmethod
+    def moe_heavy(cls, **kw) -> "SessionShapeDecl":
+        """Expert-heavy decode: long generations, sparse turns."""
+        return cls(**{**dict(n_turns=2, tokens_per_turn=16, prompt_len=6,
+                             gap_steps=8), **kw})
+
+    @classmethod
+    def scan(cls, **kw) -> "SessionShapeDecl":
+        """Scan adversary: short decodes, long think gaps, a stream of
+        fresh one-touch side keys."""
+        return cls(**{**dict(n_turns=2, tokens_per_turn=2, prompt_len=3,
+                             gap_steps=24, gap_jitter=0.25,
+                             extra_keys_per_turn=8, extra_key_pool=0),
+                      **kw})
+
+
+@dataclasses.dataclass(frozen=True)
+class SloDecl:
+    """Per-tenant service objective, priced into the gate.
+
+    `alpha_stall` is the paper's stalled-engine rent multiplier: it is
+    folded into this tenant's *own* `tau_be` via
+    `EconomicGate.from_break_even`, so a premium tenant's stall rents
+    DRAM harder than a batch tenant's. `deadline_steps` bounds turn
+    admission lateness; `p99_stall_budget` (seconds of stall per
+    generated token, p99 across the tenant's sessions) is the isolation
+    assertion's budget — None declares no budget."""
+    deadline_steps: int = 8
+    p99_stall_budget: Optional[float] = None
+    alpha_stall: float = 0.0
+
+    def validate(self, path: str):
+        if self.deadline_steps < 0:
+            raise _err(path, f"deadline_steps must be >= 0 (got "
+                             f"{self.deadline_steps})")
+        if self.p99_stall_budget is not None \
+                and self.p99_stall_budget <= 0:
+            raise _err(path, "p99_stall_budget must be positive seconds "
+                             "per token (omit it to declare no budget)")
+        if self.alpha_stall < 0:
+            raise _err(path, f"alpha_stall must be >= 0 (got "
+                             f"{self.alpha_stall!r})")
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantDecl:
+    """One tenant: a named session population with an arrival process
+    and an SLO. The tenant name becomes the reuse-tracking class for
+    its KV keys (session ids are `"{name}/NNN"`), so priors, quantiles
+    and gate thresholds are all per-tenant."""
+    name: str
+    n_sessions: int = 4
+    session: SessionShapeDecl = SessionShapeDecl()
+    arrival: ArrivalDecl = ArrivalDecl()
+    slo: SloDecl = SloDecl()
+
+    def validate(self, path: str):
+        if not self.name or "/" in self.name:
+            raise _err(path, f"tenant name must be a non-empty string "
+                             f"without '/' (got {self.name!r}); '/' "
+                             f"separates the tenant from the session id")
+        if self.n_sessions < 0:
+            raise _err(path, f"n_sessions must be >= 0 (got "
+                             f"{self.n_sessions})")
+        self.session.validate(f"{path}.session")
+        self.arrival.validate(f"{path}.arrival")
+        self.slo.validate(f"{path}.slo")
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadDecl:
+    """A declared multi-tenant scenario: who arrives when, with what
+    session shape, under which SLO. Compiled by
+    `repro.platform.workload.compile_workload` into deterministic
+    `SessionJob` lists for the continuous scheduler, access traces for
+    the autopilot benches, and per-tenant `EconomicGate` thresholds —
+    one JSON artifact end-to-end.
+
+    `isolation="per-tenant"` gives every tenant its own tau_be (its
+    `alpha_stall` folded in) and seeds its declared reuse prior;
+    `"shared"` compiles the pack against one fleet-wide threshold and
+    class (the pre-WorkloadDecl behavior — the control arm the
+    isolation benchmark compares against)."""
+    tenants: Tuple[TenantDecl, ...] = ()
+    horizon_steps: int = 96
+    seed: int = 0
+    isolation: str = "per-tenant"
+
+    ISOLATION = ("per-tenant", "shared")
+
+    def __post_init__(self):
+        if isinstance(self.tenants, list):
+            object.__setattr__(self, "tenants", tuple(self.tenants))
+
+    def validate(self, path: str = "workload"):
+        if not self.tenants:
+            raise _err(f"{path}.tenants", "need at least one tenant")
+        names = [t.name for t in self.tenants]
+        if len(set(names)) != len(names):
+            raise _err(f"{path}.tenants", f"tenant names must be unique "
+                       f"(got {names})")
+        for i, t in enumerate(self.tenants):
+            if not isinstance(t, TenantDecl):
+                raise _err(f"{path}.tenants[{i}]", f"expected TenantDecl,"
+                           f" got {type(t).__name__}")
+            t.validate(f"{path}.tenants[{i}]")
+        if self.horizon_steps < 1:
+            raise _err(f"{path}.horizon_steps", f"must be >= 1 (got "
+                       f"{self.horizon_steps})")
+        if self.isolation not in self.ISOLATION:
+            raise _err(f"{path}.isolation", f"unknown mode "
+                       f"{self.isolation!r}; one of {self.ISOLATION}")
+
+    @staticmethod
+    def from_dict(d: Dict) -> "WorkloadDecl":
+        """Reconstruct from a JSON-decoded dict (nested decls included)."""
+        tenants = tuple(
+            TenantDecl(name=t["name"],
+                       n_sessions=t.get("n_sessions", 4),
+                       session=SessionShapeDecl(**t.get("session", {})),
+                       arrival=ArrivalDecl(**t.get("arrival", {})),
+                       slo=SloDecl(**t.get("slo", {})))
+            for t in d.get("tenants", []))
+        return WorkloadDecl(
+            tenants=tenants,
+            horizon_steps=d.get("horizon_steps", 96),
+            seed=d.get("seed", 0),
+            isolation=d.get("isolation", "per-tenant"))
+
+
 PolicyLike = Union[PolicyDecl, Callable[[int], TieringPolicy]]
 
 
@@ -314,6 +564,7 @@ class HierarchySpec:
     #                                 engine session checkpoints (None=off)
     autoscale: AutoscaleDecl = AutoscaleDecl()
     scheduler: SchedulerDecl = SchedulerDecl()
+    workload: Optional[WorkloadDecl] = None
 
     def __post_init__(self):
         # normalize list inputs (JSON round-trip hands us lists)
@@ -388,6 +639,11 @@ class HierarchySpec:
                        "(omit it to disable checkpointing)")
         self.autoscale.validate()
         self.scheduler.validate()
+        if self.workload is not None:
+            if not isinstance(self.workload, WorkloadDecl):
+                raise _err("workload", f"expected WorkloadDecl, got "
+                                       f"{type(self.workload).__name__}")
+            self.workload.validate()
         if not 0 <= self.autoscale.template < len(self.hosts):
             raise _err("autoscale.template", f"host index "
                        f"{self.autoscale.template} out of range for "
@@ -490,9 +746,13 @@ class HierarchySpec:
         scheduler = d.pop("scheduler", None)
         scheduler = SchedulerDecl(**scheduler) if scheduler is not None \
             else SchedulerDecl()
+        workload = d.pop("workload", None)
+        workload = WorkloadDecl.from_dict(workload) \
+            if workload is not None else None
         weights = d.pop("weights", None)
         spec = cls(hosts=hosts, policy=policy, topology=topology,
                    net=net, autoscale=autoscale, scheduler=scheduler,
+                   workload=workload,
                    weights=tuple(weights) if weights is not None
                    else None, **d)
         return spec.validate()

@@ -41,37 +41,50 @@ def generate_scale_trace(*, n_keys: int, n_sessions: int, n_steps: int,
                          accesses_per_step: int, turns_per_session: int,
                          zipf_alpha: float = 3.0,
                          seed: int = 0) -> List[np.ndarray]:
-    """Seeded per-step access-id arrays over a keyspace of `n_keys`.
+    """Seeded per-step access-id arrays over a keyspace of `n_keys`,
+    rendered through the `WorkloadDecl` compiler (the same generator
+    behind `jobs_from_trace` and the autopilot traces).
 
-    Ids [0, n_sessions) are session KV keys: each session takes
-    `turns_per_session` turns at seeded steps, so its key re-appears at
-    measurable reuse intervals. Ids [n_sessions, n_keys) are one-shot
-    objects drawn with power-law popularity (`zipf_alpha` concentrates
-    mass on the low ids) — the scan-flood-ish background the gate must
-    keep out of DRAM. Everything is drawn up front from one rng, so the
-    trace is a pure function of the arguments."""
+    Two declared tenants: "kv" holds `n_sessions` sessions taking
+    `turns_per_session` turns each (ids [0, n_sessions) — their keys
+    re-appear at measurable reuse intervals), and "obj" is a stationary
+    background stream of `accesses_per_step` one-shot objects per step
+    drawn with power-law popularity over ids [n_sessions, n_keys) —
+    the scan-flood-ish background the gate must keep out of DRAM.
+    A pure function of the arguments."""
     if n_sessions >= n_keys:
         raise ValueError("need n_keys > n_sessions")
-    rng = np.random.default_rng(seed)
-    # session turns: uniform start, uniform later turns — bucket by step
-    turn_steps = rng.integers(0, n_steps,
-                              size=(n_sessions, turns_per_session))
-    sess_ids_by_step: List[List[int]] = [[] for _ in range(n_steps)]
-    flat_steps = turn_steps.ravel()
-    flat_sids = np.repeat(np.arange(n_sessions), turns_per_session)
-    order = np.argsort(flat_steps, kind="stable")
-    bounds = np.searchsorted(flat_steps[order],
-                             np.arange(n_steps + 1))
-    steps = []
-    n_obj = n_keys - n_sessions
-    for t in range(n_steps):
-        sess = flat_sids[order[bounds[t]:bounds[t + 1]]]
-        u = rng.random(accesses_per_step)
-        obj = n_sessions + np.minimum(
-            (n_obj * np.power(u, zipf_alpha)).astype(np.int64),
-            n_obj - 1)
-        steps.append(np.concatenate([sess.astype(np.int64), obj]))
+    from ..platform.spec import (ArrivalDecl, SessionShapeDecl,
+                                 TenantDecl, WorkloadDecl)
+    from ..platform.workload import compile_workload
+    decl = WorkloadDecl(
+        tenants=(
+            TenantDecl(
+                name="kv", n_sessions=n_sessions,
+                session=SessionShapeDecl(
+                    n_turns=turns_per_session,
+                    gap_steps=max(1, n_steps // (turns_per_session + 1)),
+                    gap_jitter=0.9),
+                arrival=ArrivalDecl(kind="stationary")),
+            TenantDecl(
+                name="obj", n_sessions=0,
+                arrival=ArrivalDecl(
+                    kind="stationary",
+                    background_per_step=accesses_per_step,
+                    background_pool=n_keys - n_sessions,
+                    background_zipf=zipf_alpha)),
+        ),
+        horizon_steps=n_steps, seed=seed)
+    steps, _, _ = compile_workload(decl).id_steps()
     return steps
+
+
+def _prior_or_inf(quantile: Optional[float]) -> float:
+    """Class-sketch prior -> admission estimate: None (no evidence)
+    means "never reused" for the vectorized gate. An explicit None
+    check — `quantile or np.inf` would also send a legitimate 0.0
+    prior (maximally hot) to infinity (maximally cold)."""
+    return np.inf if quantile is None else float(quantile)
 
 
 def scale_replay(*, n_keys: int = 1_000_000, n_sessions: int = 100_000,
@@ -80,23 +93,27 @@ def scale_replay(*, n_keys: int = 1_000_000, n_sessions: int = 100_000,
                  dram_capacity_keys: Optional[int] = None,
                  l_blk: int = 128 << 10, tau_be: float = 5.0,
                  step_time: float = 0.25, zipf_alpha: float = 3.0,
-                 seed: int = 0,
-                 sim_cfg=None) -> Tuple[Dict[str, float],
-                                        Dict[str, float]]:
+                 seed: int = 0, sim_cfg=None,
+                 trace: Optional[List[np.ndarray]] = None
+                 ) -> Tuple[Dict[str, float], Dict[str, float]]:
     """Replay the scale trace through the vectorized control plane.
 
     Returns `(record, timings)`: `record` is deterministic (modeled
     stall, hit/admission counters, per-section op counts) and safe to
     byte-diff across runs; `timings` is measured wall-clock seconds per
     control-plane section on this machine (reported separately — never
-    mixed into the modeled numbers)."""
+    mixed into the modeled numbers). Pass `trace` (per-step id arrays,
+    ids < n_sessions classed "kv", the rest "obj") to replay a custom
+    access pattern — e.g. a `CompiledWorkload.id_steps()` rendering —
+    instead of the generated one."""
     if dram_capacity_keys is None:
         dram_capacity_keys = n_keys // 10
-    trace = generate_scale_trace(
-        n_keys=n_keys, n_sessions=n_sessions, n_steps=n_steps,
-        accesses_per_step=accesses_per_step,
-        turns_per_session=turns_per_session, zipf_alpha=zipf_alpha,
-        seed=seed)
+    if trace is None:
+        trace = generate_scale_trace(
+            n_keys=n_keys, n_sessions=n_sessions, n_steps=n_steps,
+            accesses_per_step=accesses_per_step,
+            turns_per_session=turns_per_session, zipf_alpha=zipf_alpha,
+            seed=seed)
 
     fabric = ShardedTieredStore(n_hosts, clock=VirtualClock())
     tracker = ReuseTracker(ghost_capacity=n_keys, n_buckets=32,
@@ -151,8 +168,8 @@ def scale_replay(*, n_keys: int = 1_000_000, n_sessions: int = 100_000,
         measured = intervals > 0
         counters["first_touches"] += int(n - measured.sum())
         prior = np.empty(2)
-        prior[0] = tracker.class_quantile("kv", 0.5) or np.inf
-        prior[1] = tracker.class_quantile("obj", 0.5) or np.inf
+        prior[0] = _prior_or_inf(tracker.class_quantile("kv", 0.5))
+        prior[1] = _prior_or_inf(tracker.class_quantile("obj", 0.5))
         est = np.where(measured, intervals,
                        prior[(ids >= n_sessions).astype(np.int64)])
         hit = resident[ids]
@@ -170,12 +187,16 @@ def scale_replay(*, n_keys: int = 1_000_000, n_sessions: int = 100_000,
         w3 = time.perf_counter()
 
         # modeled stall: this step's flash misses queue behind each
-        # other; price the ramp off the precomputed ladder
-        n_miss = int(n - hit.sum())
+        # other; price the ramp off the precomputed ladder. Misses
+        # dedupe per step: the *first* touch of a non-resident key
+        # queues the flash fetch, later touches in the same step are
+        # served by it (DRAM hits) — one cold key touched 50x in a
+        # step is 1 queued miss, not 50
+        n_miss = int(np.unique(ids[~hit]).size)
         stall = float(cum_stall[min(n_miss, d_max)]
                       + max(0, n_miss - d_max) * sat_cost)
         total_stall += stall
-        counters["dram_hits"] += int(hit.sum())
+        counters["dram_hits"] += int(n - n_miss)
         counters["flash_misses"] += n_miss
         counters["admitted"] += int(admit.sum())
         w4 = time.perf_counter()

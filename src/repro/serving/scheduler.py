@@ -65,11 +65,13 @@ class SessionJob:
     sid: str
     prompt: np.ndarray                  # [S] int32, first-turn prefill
     turns: List[Turn]
+    tenant: str = ""                    # SLO accounting class ("" = none)
     # runtime state (owned by the scheduler)
     request: Optional[Request] = None
     turn_idx: int = 0
     state: str = "waiting"  # waiting|ready|running|parked|paused|done
     admitted_step: int = -1
+    stall: float = 0.0      # restore (KV fetch) stall attributed here (s)
 
     def target(self) -> int:
         """Cumulative token count at the end of the current turn."""
@@ -112,10 +114,12 @@ class ContinuousScheduler:
         self.metrics = {
             "ticks": 0, "decode_steps": 0, "idle_ticks": 0,
             "slot_idle_steps": 0, "parked_slot_steps": 0,
-            "admissions": 0, "resumes": 0, "pauses": 0, "parks": 0,
-            "preempt_pauses": 0, "prefetches": 0, "deadline_misses": 0,
-            "tokens": 0,
+            "admissions": 0, "resumes": 0, "unparks": 0, "pauses": 0,
+            "parks": 0, "preempt_pauses": 0, "prefetches": 0,
+            "deadline_misses": 0, "tokens": 0,
         }
+        # per-tenant event counters (report() folds in token/stall sums)
+        self.tenant_metrics: Dict[str, Dict[str, int]] = {}
 
     # ------------------------------------------------------------- intake
     def submit(self, job: SessionJob):
@@ -150,6 +154,17 @@ class ContinuousScheduler:
             return self.engine.prefetch_lead(job.sid)
         return int(self.prefetch_lead)
 
+    def _bump(self, job: SessionJob, field: str, by: int = 1):
+        """Count `field` against the job's tenant (no-op untagged)."""
+        if not job.tenant:
+            return
+        m = self.tenant_metrics.get(job.tenant)
+        if m is None:
+            m = {"admissions": 0, "resumes": 0, "unparks": 0,
+                 "parks": 0, "pauses": 0, "deadline_misses": 0}
+            self.tenant_metrics[job.tenant] = m
+        m[field] += by
+
     # --------------------------------------------------------------- tick
     def tick(self):
         """One scheduler step: arrivals -> prefetch -> admission ->
@@ -159,9 +174,18 @@ class ContinuousScheduler:
         while self._waiting and self._waiting[0][0] <= self.now:
             _, _, job = heapq.heappop(self._waiting)
             if job.state == "parked":
-                # resident the whole gap: just flip the slot back on
+                # resident the whole gap: just flip the slot back on.
+                # This is an admission like any other — counted, and
+                # held to the same deadline check paused sessions pay
+                # (a parked turn popped late is still a miss)
                 eng.unpark(job.sid)
                 job.state = "running"
+                job.admitted_step = self.now
+                self.metrics["unparks"] += 1
+                self._bump(job, "unparks")
+                if self.now > job.deadline():
+                    self.metrics["deadline_misses"] += 1
+                    self._bump(job, "deadline_misses")
             else:
                 self._push_ready(job)
         # 2. prefetch-led resume for paused sessions nearing their due
@@ -214,6 +238,7 @@ class ContinuousScheduler:
         victim.state = "paused"
         self.metrics["pauses"] += 1
         self.metrics["preempt_pauses"] += 1
+        self._bump(victim, "pauses")
         return True
 
     def _admit(self, job: SessionJob):
@@ -223,13 +248,21 @@ class ContinuousScheduler:
                                   max_new=job.total())
             eng.admit(job.request)
             self.metrics["admissions"] += 1
+            self._bump(job, "admissions")
         else:
+            # the engine's stall clock advances inside resume (waiting
+            # out the KV fetch); the delta is this session's restore
+            # stall — the per-tenant p99 currency
+            before = eng.kv_stall_time
             eng.resume(job.sid)
+            job.stall += eng.kv_stall_time - before
             self.metrics["resumes"] += 1
+            self._bump(job, "resumes")
         job.state = "running"
         job.admitted_step = self.now
         if self.now > job.deadline():
             self.metrics["deadline_misses"] += 1
+            self._bump(job, "deadline_misses")
 
     def _turn_boundaries(self):
         eng = self.engine
@@ -249,6 +282,7 @@ class ContinuousScheduler:
                 eng.park(job.sid)
                 job.state = "parked"
                 self.metrics["parks"] += 1
+                self._bump(job, "parks")
                 self._push_waiting(job)
             elif gap <= 0:
                 # next turn already due: keep decoding in place
@@ -257,6 +291,7 @@ class ContinuousScheduler:
                 eng.pause(job.sid)
                 job.state = "paused"
                 self.metrics["pauses"] += 1
+                self._bump(job, "pauses")
                 self._push_waiting(job)
 
     # ---------------------------------------------------------------- run
@@ -281,7 +316,38 @@ class ContinuousScheduler:
         idle_cost = eng.step_time * m["slot_idle_steps"]
         m["per_token_stall"] = ((eng.kv_stall_time + idle_cost)
                                 / max(tokens, 1))
+        tenants = self.tenant_report()
+        if tenants:
+            m["tenants"] = tenants
         return m
+
+    def tenant_report(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant SLO accounting over tagged jobs: token/stall
+        sums, mean and p99 per-token restore stall (p99 across the
+        tenant's sessions — each session's sample is its own
+        stall/tokens), plus the event counters. Slot-idle rent is a
+        fleet-level cost and stays out of the per-tenant stall."""
+        out: Dict[str, Dict[str, float]] = {}
+        samples: Dict[str, List[float]] = {}
+        for job in sorted(self.jobs.values(), key=lambda j: j.sid):
+            if not job.tenant:
+                continue
+            d = out.setdefault(job.tenant, {
+                "sessions": 0, "tokens": 0, "stall": 0.0})
+            tokens = (len(job.request.generated)
+                      if job.request is not None else 0)
+            d["sessions"] += 1
+            d["tokens"] += tokens
+            d["stall"] += job.stall
+            samples.setdefault(job.tenant, []).append(
+                job.stall / max(tokens, 1))
+        for name, d in out.items():
+            d["per_token_stall"] = d["stall"] / max(d["tokens"], 1)
+            d["p99_per_token_stall"] = float(
+                np.percentile(np.array(samples[name]), 99))
+            for k, v in self.tenant_metrics.get(name, {}).items():
+                d[k] = v
+        return {k: out[k] for k in sorted(out)}
 
 
 def run_lockstep(engine: DecodeEngine, jobs: List[SessionJob], *,
@@ -299,8 +365,9 @@ def run_lockstep(engine: DecodeEngine, jobs: List[SessionJob], *,
     metrics = {
         "ticks": 0, "decode_steps": 0, "idle_ticks": 0,
         "slot_idle_steps": 0, "parked_slot_steps": 0,
-        "admissions": 0, "resumes": 0, "pauses": 0, "parks": 0,
-        "preempt_pauses": 0, "prefetches": 0, "deadline_misses": 0,
+        "admissions": 0, "resumes": 0, "unparks": 0, "pauses": 0,
+        "parks": 0, "preempt_pauses": 0, "prefetches": 0,
+        "deadline_misses": 0,
     }
 
     def pending_work():
@@ -334,7 +401,9 @@ def run_lockstep(engine: DecodeEngine, jobs: List[SessionJob], *,
                 engine.admit(job.request)
                 metrics["admissions"] += 1
             else:
+                before = engine.kv_stall_time
                 engine.resume(job.sid)
+                job.stall += engine.kv_stall_time - before
                 metrics["resumes"] += 1
             if now > job.deadline():
                 metrics["deadline_misses"] += 1
@@ -382,35 +451,50 @@ def jobs_from_trace(scenario: str, *, n_jobs: int = 8,
                     prompt_len: int = 5, vocab: int = 64,
                     horizon: int = 96, seed: int = 0
                     ) -> List[SessionJob]:
-    """Derive a deterministic multi-turn job set from an autopilot trace
-    scenario: each job's turn due-steps follow the scenario's arrival
-    density (a Zipf trace front-loads hot sessions, the diurnal trace
-    spreads turns across the cycle), so the continuous-vs-lockstep race
-    runs on the same workload shapes the economics benches use."""
-    from ..autopilot.traces import SCENARIOS, generate
-    trace = generate(scenario, n_steps=horizon, seed=seed)
-    # per-step arrival mass -> cumulative distribution over the horizon
-    mass = np.array([len(s) for s in trace.steps], dtype=float) + 1e-9
-    cdf = np.cumsum(mass) / mass.sum()
-    rng = np.random.default_rng(seed * 7919 + SCENARIOS.index(scenario))
-    jobs = []
-    for i in range(n_jobs):
-        draws = np.sort(np.searchsorted(cdf, rng.random(n_turns)))
-        turns, prev = [], -1
-        for k, d in enumerate(draws):
-            # heterogeneous turn lengths: long and short turns sharing a
-            # gang is exactly where lock-step scheduling leaks slot-time
-            new = int(rng.integers(max(2, tokens_per_turn // 2),
-                                   2 * tokens_per_turn))
-            # turns must be strictly ordered and leave decode room
-            due = int(max(d, prev + new + 1))
-            turns.append(Turn(due_step=due, max_new=new,
-                              deadline_steps=4))
-            prev = due
-        prompt = rng.integers(1, vocab, size=prompt_len).astype(np.int32)
-        jobs.append(SessionJob(sid=f"s{i:03d}", prompt=prompt,
-                               turns=turns))
-    return jobs
+    """Deterministic multi-turn job set for an autopilot trace scenario,
+    rendered through the `WorkloadDecl` compiler: the scenario name maps
+    to a declared arrival process (zipf -> stationary, scan_flood ->
+    periodic bursts, diurnal -> the day curve, multi_tenant -> a steady
+    + a bursty tenant), so the continuous-vs-lockstep race runs on the
+    same declared shapes the economics benches and the tenant-isolation
+    bench use."""
+    from ..autopilot.traces import SCENARIOS
+    from ..platform.spec import (ArrivalDecl, SessionShapeDecl, SloDecl,
+                                 TenantDecl, WorkloadDecl)
+    from ..platform.workload import compile_workload
+    if scenario not in SCENARIOS:
+        raise ValueError(f"unknown scenario {scenario!r}; one of "
+                         f"{SCENARIOS}")
+    # heterogeneous turn lengths (tokens_per_turn//2 .. 2x) and wide
+    # jittered gaps: long and short turns sharing a gang is exactly
+    # where lock-step scheduling leaks slot-time
+    shape = SessionShapeDecl(n_turns=n_turns,
+                             tokens_per_turn=tokens_per_turn,
+                             prompt_len=prompt_len,
+                             gap_steps=max(1, horizon // (n_turns + 1)),
+                             gap_jitter=0.9)
+    slo = SloDecl(deadline_steps=4)
+    if scenario == "multi_tenant":
+        n_b = n_jobs // 2
+        tenants = (
+            TenantDecl(name="tenant_a", n_sessions=n_jobs - n_b,
+                       session=shape,
+                       arrival=ArrivalDecl(kind="stationary"), slo=slo),
+            TenantDecl(name="tenant_b", n_sessions=n_b, session=shape,
+                       arrival=ArrivalDecl(kind="scan_flood", period=30,
+                                           burst_len=6), slo=slo))
+    else:
+        arrival = {
+            "zipf": ArrivalDecl(kind="stationary"),
+            "scan_flood": ArrivalDecl(kind="scan_flood", period=40,
+                                      burst_len=8),
+            "diurnal": ArrivalDecl(kind="diurnal", period=horizon),
+        }[scenario]
+        tenants = (TenantDecl(name="kv", n_sessions=n_jobs,
+                              session=shape, arrival=arrival, slo=slo),)
+    decl = WorkloadDecl(tenants=tenants, horizon_steps=horizon,
+                        seed=seed * 7919 + SCENARIOS.index(scenario))
+    return compile_workload(decl).jobs(vocab=vocab)
 
 
 def compare_scheduling(engine_factory, jobs_factory, *,

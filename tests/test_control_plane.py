@@ -194,3 +194,44 @@ def test_scale_replay_deterministic_and_consistent():
     assert rec1["total_stall"] > 0.0
     assert set(timings) >= {"digest", "routing", "tracking", "admission",
                             "stall_pricing", "total", "keys_per_sec"}
+
+
+def test_scale_replay_dedupes_misses_per_step():
+    """Regression: one cold key touched 50x in a step queues ONE flash
+    fetch — the first touch misses, the 49 repeats are served by the
+    in-flight fetch (DRAM hits). The old accounting queued all 50,
+    overstating the step's stall by the whole ladder ramp."""
+    from repro.runtime.service import SsdQueueModel
+    from repro.serving.scale import scale_replay
+
+    l_blk = 128 << 10
+    rec, _ = scale_replay(n_keys=100, n_sessions=10, n_hosts=2,
+                          l_blk=l_blk, trace=[np.full(50, 7, np.int64)])
+    assert rec["ops_flash_misses"] == 1.0
+    assert rec["ops_dram_hits"] == 49.0
+    assert rec["ops_dram_hits"] + rec["ops_flash_misses"] \
+        == rec["accesses"] == 50.0
+    # the stall is exactly one depth-1 fetch, not a 50-deep queue
+    one_fetch = SsdQueueModel.shared().service(l_blk, 1).total
+    assert rec["total_stall"] == pytest.approx(one_fetch)
+
+    # distinct cold keys still queue behind each other (no over-dedupe)
+    rec2, _ = scale_replay(n_keys=100, n_sessions=10, n_hosts=2,
+                           l_blk=l_blk,
+                           trace=[np.arange(4, dtype=np.int64)])
+    assert rec2["ops_flash_misses"] == 4.0
+    ladder = sum(SsdQueueModel.shared().service(l_blk, d).total
+                 for d in (1, 2, 3, 4))
+    assert rec2["total_stall"] == pytest.approx(ladder)
+    assert rec2["total_stall"] > one_fetch
+
+
+def test_prior_or_inf_explicit_none_check():
+    """Regression: `quantile or np.inf` sent a legitimate 0.0 prior
+    (maximally hot class) to infinity (maximally cold) — only a
+    missing prior means "assume never reused"."""
+    from repro.serving.scale import _prior_or_inf
+
+    assert _prior_or_inf(None) == np.inf
+    assert _prior_or_inf(0.0) == 0.0
+    assert _prior_or_inf(2.5) == 2.5

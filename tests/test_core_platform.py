@@ -107,3 +107,20 @@ class TestTieringPolicy:
             p.observe(key, now=iv)
         cands = p.evict_candidates(Tier.DRAM, now=10.0)
         assert cands[0] == "b"  # stalest first
+
+    def test_evict_candidates_zero_ema_ranks_hottest(self):
+        """Regression: a 0.0 EMA is *maximally hot*, not missing. The
+        old `ema or now - last_seen` guard treated it as falsy and
+        ranked the key by its idle gap — evicting the hottest resident
+        first whenever its EMA rounded to exactly zero."""
+        p = TieringPolicy(tau_hot=0.1, tau_be=5.0, ema_alpha=1.0)
+        p.observe("idle", now=1.0)          # one touch: no EMA, 9s idle
+        p.observe("hot", now=0.0)
+        p.observe("hot", now=2.0)
+        p._ema["hot"] = 0.0                 # white-box: the falsy EMA
+        p.observe("warm", now=0.0)
+        p.observe("warm", now=3.0)          # genuine 3.0s EMA
+        cands = p.evict_candidates(Tier.DRAM, now=10.0)
+        # staleness: idle=9.0 (gap), warm=3.0, hot=0.0 — the buggy
+        # guard scored hot at 8.0 (gap) and evicted it before warm
+        assert cands == ["idle", "warm", "hot"]

@@ -316,7 +316,8 @@ def test_autoscaler_never_underprovisions_heterogeneous_fleet():
 
     def stub_advise(target_blocks, horizon=None):
         return SimpleNamespace(recommended_hosts=2,
-                               recommended_dram_bytes=target_blocks * blk)
+                               recommended_dram_bytes=target_blocks * blk,
+                               limit="none", bandwidth_limited=False)
 
     # target 33.3 blocks: dropping any 5-block host under-provisions
     p.advise = lambda horizon=None: stub_advise(33.3)
@@ -339,6 +340,53 @@ def test_autoscaler_respects_cooldown_and_bounds():
     d = p.autoscale(0)
     assert d.action == "hold" and p.n_hosts == 2
     assert d.recommended == 2
+
+
+def test_autoscaler_acts_on_bandwidth_limited_verdicts():
+    """Regression: the loop only compared DRAM capacity to the hot-set
+    byte target, so a `dram-bandwidth`/`ssd-bandwidth` verdict (T_B/T_S
+    binding — Eq. 2/3) was ignored: no scale-up when more bytes on the
+    same hosts can't help, and worse, retirement of the very spindles
+    absorbing the demand."""
+    from types import SimpleNamespace
+    blk = 1 << 20
+    spec = HierarchySpec(
+        hosts=(HostDecl(tiers={"dram": TierDecl(20 * blk, 45e9, 5e-7)},
+                        count=2),),
+        policy=PolicyDecl.economic(l_blk=blk),
+        autoscale=AutoscaleDecl(min_hosts=1, max_hosts=3,
+                                cooldown_steps=0))
+    p = Platform.compile(spec)
+
+    def advice(target_blocks, limit):
+        return SimpleNamespace(
+            recommended_hosts=2,
+            recommended_dram_bytes=target_blocks * blk,
+            limit=limit, t_b=0.5, t_s=1.5,
+            bandwidth_limited=limit in ("dram-bandwidth",
+                                        "ssd-bandwidth"))
+
+    # capacity covers the hot set (10 < 40 blocks) but the DRAM wire is
+    # the binding constraint: add a host to spread the demand
+    p.advise = lambda horizon=None: advice(10.0, "dram-bandwidth")
+    d = p.autoscale(0)
+    assert d.action == "add" and p.n_hosts == 3
+    assert "dram-bandwidth-limited" in d.reason and "T_B" in d.reason
+
+    # still limited at max_hosts: hold — and the reason says why; the
+    # remove branch must NOT fire despite 30 blocks of headroom
+    d = p.autoscale(1)
+    assert d.action == "hold" and p.n_hosts == 3
+    assert "max_hosts" in d.reason
+
+    p.advise = lambda horizon=None: advice(10.0, "ssd-bandwidth")
+    d = p.autoscale(2)
+    assert d.action == "hold" and p.n_hosts == 3
+
+    # the same headroom with the verdict cleared retires the host
+    p.advise = lambda horizon=None: advice(10.0, "none")
+    d = p.autoscale(3)
+    assert d.action == "remove" and p.n_hosts == 2
 
 
 # ---------------------------------------------------------------------------

@@ -351,3 +351,50 @@ def test_scheduler_interleaving_property(prop_engines, seed):
         # this cache geometry: per-step admission must never retrace
         assert after == before, (before, after)
     _SPLICE_WARM.append(1)
+
+
+def test_unpark_is_counted_and_deadline_checked(setup):
+    """Regression: the unpark fast path (arrival pops a *parked* job)
+    bypassed `_admit`, so parked turns were invisible to admission
+    accounting — no counter, no deadline check, no per-tenant bump.
+    A parked turn popped late is an admission like any other."""
+    cfg, rules, params = setup
+    rng = np.random.default_rng(21)
+    mk = lambda n: rng.integers(1, cfg.vocab, n).astype(np.int32)
+
+    # on-time unpark: counted (fleet + tenant), no miss
+    eng = _engine(cfg, params, rules, max_slots=2)
+    sched = ContinuousScheduler(eng, pause_idle_steps=8,
+                                prefetch_lead=0)
+    x = SessionJob(sid="x", prompt=mk(5), tenant="t",
+                   turns=[Turn(due_step=0, max_new=3),
+                          Turn(due_step=9, max_new=3,
+                               deadline_steps=4)])
+    rep = sched.run([x], max_ticks=200)
+    assert x.state == "done"
+    assert rep["parks"] >= 1            # the gap did park, not pause
+    assert rep["unparks"] == rep["parks"]
+    assert rep["deadline_misses"] == 0
+    assert rep["tenants"]["t"]["unparks"] == rep["unparks"]
+
+    # late unpark: a parked turn popped past its deadline is a miss
+    eng2 = _engine(cfg, params, rules, max_slots=2)
+    sched2 = ContinuousScheduler(eng2, pause_idle_steps=8,
+                                 prefetch_lead=0)
+    y = SessionJob(sid="y", prompt=mk(5), tenant="t",
+                   turns=[Turn(due_step=0, max_new=3),
+                          Turn(due_step=9, max_new=3,
+                               deadline_steps=4)])
+    sched2.submit(y)
+    for _ in range(50):
+        sched2.tick()
+        if y.state == "parked":
+            break
+    assert y.state == "parked"
+    sched2.now = y.deadline() + 5       # white-box: stall the clock past
+    sched2.tick()                       # the deadline, then let it pop
+    assert y.state == "running"
+    assert sched2.metrics["unparks"] == 1
+    assert sched2.metrics["deadline_misses"] == 1
+    assert sched2.tenant_metrics["t"]["deadline_misses"] == 1
+    assert y.admitted_step == y.deadline() + 5
