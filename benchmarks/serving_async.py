@@ -12,6 +12,7 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
+from repro.obs import write_bench_json  # noqa: E402
 from repro.serving.bench import compare  # noqa: E402
 
 
@@ -24,12 +25,19 @@ def main():
     ap.add_argument("--step-time-ms", type=float, default=2.0)
     ap.add_argument("--lead", type=int, default=8,
                     help="prefetch lead in decode steps")
+    ap.add_argument("--out", type=pathlib.Path, default=None,
+                    help="write the canonical JSON report here "
+                         "(stdout keeps the human table)")
     args = ap.parse_args()
 
-    r = compare(n_sessions=args.sessions, rounds=args.rounds,
-                kv_bytes=int(args.kv_mib * 2**20),
-                decode_steps=args.decode_steps,
-                step_time=args.step_time_ms * 1e-3, lead=args.lead)
+    params = dict(n_sessions=args.sessions, rounds=args.rounds,
+                  kv_bytes=int(args.kv_mib * 2**20),
+                  decode_steps=args.decode_steps,
+                  step_time=args.step_time_ms * 1e-3, lead=args.lead)
+    r = compare(**params)
+    if args.out:
+        write_bench_json({"params": params, **r}, out=args.out,
+                         echo=False)
     print(f"{'mode':8s} {'stall/token':>12s} {'total stall':>12s} "
           f"{'makespan':>10s} {'pf hit':>7s} {'pf late':>8s} {'MuM':>5s}")
     for mode in ("sync", "async"):

@@ -33,14 +33,18 @@ both r=1 and r=3 on measured $/token).
 Everything runs on a VirtualClock with seeded traces, so the JSON is
 byte-identical across runs; CI executes `--smoke` twice and diffs.
 
+`--trace` attaches the causal tracer to the scenario suite and writes
+the Perfetto/Chrome trace_event export (open at ui.perfetto.dev) —
+byte-identical across runs, which CI also diffs.
+
   PYTHONPATH=src python benchmarks/serving_autopilot.py --smoke
+  PYTHONPATH=src python benchmarks/serving_autopilot.py --smoke --trace
   PYTHONPATH=src python benchmarks/serving_autopilot.py --autoscale
   PYTHONPATH=src python benchmarks/serving_autopilot.py --failover
   PYTHONPATH=src python benchmarks/serving_autopilot.py \
       --steps 240 --scenarios zipf,scan_flood --out autopilot.json
 """
 import argparse
-import json
 import pathlib
 import sys
 
@@ -48,6 +52,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 from repro.autopilot.bench import run_suite  # noqa: E402
 from repro.autopilot.traces import SCENARIOS  # noqa: E402
+from repro.obs import write_bench_json  # noqa: E402
 
 
 def run_autoscale(args):
@@ -58,10 +63,7 @@ def run_autoscale(args):
         step_time=args.step_time_ms * 1e-3,
         l_blk=int(args.l_blk_kib * 1024),
         alpha_accel=args.alpha_accel, seed=args.seed)
-    js = json.dumps(report, sort_keys=True, indent=2)
-    if args.out:
-        args.out.write_text(js + "\n")
-    print(js)
+    write_bench_json(report, out=args.out)
 
     a, s = report["autoscaled"], report["static"]
     print(f"\n{'arm':>10s} {'hosts':>11s} {'$/tok':>10s} "
@@ -91,10 +93,7 @@ def run_failover(args):
         step_time=args.step_time_ms * 1e-3,
         l_blk=int(args.l_blk_kib * 1024),
         alpha_accel=args.alpha_accel, seed=args.seed)
-    js = json.dumps(report, sort_keys=True, indent=2)
-    if args.out:
-        args.out.write_text(js + "\n")
-    print(js)
+    write_bench_json(report, out=args.out)
 
     print(f"\n{'arm':>4s} {'$/tok':>10s} {'stall us/tok':>13s} "
           f"{'lost keys':>9s} {'lost sess':>9s} {'resumed':>8s} "
@@ -150,6 +149,13 @@ def main():
                          "advisor's replication recommendation")
     ap.add_argument("--autoscale-scenario", default="diurnal",
                     help="trace scenario for --autoscale/--failover")
+    ap.add_argument("--trace", action="store_true",
+                    help="attach the causal tracer to the scenario "
+                         "suite and export a Perfetto/Chrome "
+                         "trace_event JSON (deterministic bytes)")
+    ap.add_argument("--trace-out", type=pathlib.Path, default=None,
+                    help="trace export path (default "
+                         "autopilot_trace.json)")
     ap.add_argument("--out", type=pathlib.Path, default=None,
                     help="also write the JSON report here")
     args = ap.parse_args()
@@ -161,21 +167,38 @@ def main():
 
     scenarios = [s for s in str(args.scenarios).split(",") if s]
     n_steps = 120 if args.smoke else args.steps
+    obs = None
+    if args.trace:
+        from repro.obs import Observability
+        obs = Observability(trace=True)
     report = run_suite(
         scenarios, n_steps=n_steps,
         step_time=args.step_time_ms * 1e-3,
         l_blk=int(args.l_blk_kib * 1024), dram_frac=args.dram_frac,
-        alpha_accel=args.alpha_accel, seed=args.seed)
+        alpha_accel=args.alpha_accel, seed=args.seed, obs=obs)
     report["params"] = {
         "scenarios": scenarios, "n_steps": n_steps,
         "step_time_ms": args.step_time_ms, "l_blk_kib": args.l_blk_kib,
         "dram_frac": args.dram_frac, "alpha_accel": args.alpha_accel,
         "seed": args.seed,
     }
-    js = json.dumps(report, sort_keys=True, indent=2)
-    if args.out:
-        args.out.write_text(js + "\n")
-    print(js)
+    if obs is not None:
+        report["stall_ledger"] = obs.ledger.as_dict()
+    write_bench_json(report, out=args.out)
+
+    if obs is not None:
+        trace_out = args.trace_out or pathlib.Path("autopilot_trace.json")
+        trace_out.write_text(obs.tracer.to_chrome_json() + "\n")
+        print(f"\nperfetto trace: {trace_out} "
+              f"({len(obs.tracer)} events, "
+              f"{obs.tracer.dropped} dropped) — open at ui.perfetto.dev",
+              file=sys.stderr)
+        flame = obs.tracer.flamegraph().splitlines()
+        for line in flame[:12]:
+            print(f"  {line}", file=sys.stderr)
+        if len(flame) > 12:
+            print(f"  ... ({len(flame) - 12} more stacks)",
+                  file=sys.stderr)
 
     print(f"\n{'scenario':>12s} {'mode':>9s} {'$/tok':>10s} "
           f"{'stall us/tok':>13s} {'rent':>7s} {'flashIO':>8s} "

@@ -48,6 +48,7 @@ import sys
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 from repro.core.policy import Tier  # noqa: E402
+from repro.obs import write_bench_json  # noqa: E402
 from repro.serving.bench import compare_churn, compare_fleet  # noqa: E402
 
 
@@ -189,10 +190,7 @@ def main():
                          "spec": None if spec is None else
                          json.loads(spec.to_json())},
               "trajectory": trajectory}
-    js = json.dumps(report, sort_keys=True, indent=2)
-    if args.out:
-        args.out.write_text(js + "\n")
-    print(js)
+    write_bench_json(report, out=args.out)
 
     print(f"\n{'hosts':>5s} {'skew':>5s} {'sync us/tok':>12s} "
           f"{'async us/tok':>13s} {'speedup':>8s} {'remote':>7s}",

@@ -30,7 +30,6 @@ Two parts, one JSON report:
       --scenarios zipf,diurnal --out scale.json
 """
 import argparse
-import json
 import pathlib
 import sys
 
@@ -101,9 +100,14 @@ def main():
                     help="reduced sizes for the CI determinism gate")
     ap.add_argument("--skip-compare", action="store_true",
                     help="scale replay only (no model decode)")
+    ap.add_argument("--no-metrics", action="store_true",
+                    help="run the replay without the metrics plane "
+                         "(CI compares wall time against the default "
+                         "metrics-on run; modeled JSON is identical)")
     ap.add_argument("--out", type=pathlib.Path, default=None)
     args = ap.parse_args()
 
+    from repro.obs import Observability, write_bench_json
     from repro.serving.scale import scale_replay
 
     if args.smoke:
@@ -116,7 +120,8 @@ def main():
                         accesses_per_step=args.accesses,
                         n_hosts=args.hosts, tau_be=args.tau_be,
                         seed=args.seed)
-    record, timings = scale_replay(**scale_kw)
+    obs = None if args.no_metrics else Observability()
+    record, timings = scale_replay(**scale_kw, obs=obs)
 
     report = {"scale": record, "params": {
         **{k: float(v) for k, v in scale_kw.items()},
@@ -129,19 +134,22 @@ def main():
         report["compare"] = run_compare(scenarios, smoke=args.smoke,
                                         seed=args.seed)
 
-    js = json.dumps(report, sort_keys=True, indent=2)
-    if args.out:
-        args.out.write_text(js + "\n")
-    print(js)
+    write_bench_json(report, out=args.out)
 
     # ---- human report (stderr): control-plane cost vs modeled stall ----
     print(f"\ncontrol plane (measured wall-clock, this machine — "
           f"reported separately from modeled stall):", file=sys.stderr)
     for k in ("digest", "routing", "tracking", "admission",
-              "stall_pricing"):
+              "stall_pricing", "metrics"):
         print(f"  {k:>13s}: {timings[k]*1e3:9.1f} ms", file=sys.stderr)
     print(f"  {'throughput':>13s}: {timings['keys_per_sec']/1e6:9.2f} "
           f"M keys/s steady-state", file=sys.stderr)
+    if obs is not None:
+        print(f"  metrics plane on: "
+              f"accesses={obs.metrics.counter('scale_accesses').value():.0f}"
+              f" ledger flash_service="
+              f"{obs.ledger.totals['flash_service']:.3f}s",
+              file=sys.stderr)
     print(f"\nmodeled (deterministic, in the JSON): "
           f"hit_rate={record['hit_rate']:.3f} "
           f"per_access_stall={record['per_access_stall']*1e6:.1f}us "

@@ -26,7 +26,7 @@ CI runs `--smoke` twice and diffs the bytes.
       --scan-sessions 16 --dram-blobs 8 --out tenants.json
 """
 import argparse
-import json
+import dataclasses
 import pathlib
 import sys
 
@@ -48,9 +48,16 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="pinned small pack for the CI determinism gate")
+    ap.add_argument("--trace", action="store_true",
+                    help="compile the arms with the causal tracer on "
+                         "and export a Perfetto trace per arm")
+    ap.add_argument("--trace-out", type=pathlib.Path, default=None,
+                    help="trace export prefix (default tenants_trace; "
+                         "writes <prefix>_<arm>.json)")
     ap.add_argument("--out", type=pathlib.Path, default=None)
     args = ap.parse_args()
 
+    from repro.obs import write_bench_json
     from repro.serving.tenants import run_tenant_bench, tenant_pack
 
     if args.smoke:
@@ -62,12 +69,24 @@ def main():
                            dram_blobs=args.dram_blobs,
                            p99_stall_budget=args.budget,
                            horizon_steps=args.horizon, seed=args.seed)
-    report = run_tenant_bench(spec, max_slots=args.max_slots)
+    trace_sink = None
+    if args.trace:
+        from repro.platform import ObservabilityDecl
+        spec = dataclasses.replace(
+            spec, observability=ObservabilityDecl(trace=True))
+        trace_sink = {}
+    report = run_tenant_bench(spec, max_slots=args.max_slots,
+                              trace_sink=trace_sink)
 
-    js = json.dumps(report, sort_keys=True, indent=2)
-    if args.out:
-        args.out.write_text(js + "\n")
-    print(js)
+    write_bench_json(report, out=args.out)
+
+    if trace_sink:
+        prefix = args.trace_out or pathlib.Path("tenants_trace")
+        for arm, tracer in sorted(trace_sink.items()):
+            p = prefix.with_name(f"{prefix.name}_{arm}.json")
+            p.write_text(tracer.to_chrome_json() + "\n")
+            print(f"perfetto trace ({arm}): {p} ({len(tracer)} events)",
+                  file=sys.stderr)
 
     # ---- human report (stderr) ----------------------------------------
     print(f"\n{'arm':>13s} {'tenant':>8s} {'sessions':>8s} {'tokens':>7s} "

@@ -105,6 +105,28 @@ def main():
           f"{advice.recommended_hosts} host(s); platform.autoscale() "
           f"closes the loop")
 
+    print()
+    print("=" * 72)
+    print("6. Observability: the Eq. 1 stall ledger + a Perfetto trace")
+    print("=" * 72)
+    import dataclasses
+    from repro.platform import ObservabilityDecl
+    traced = Platform.compile(dataclasses.replace(
+        spec, observability=ObservabilityDecl(trace=True)))
+    sess = traced.kv_session("user-42")
+    sess.save(np.zeros(1 << 16, np.float32))
+    traced.clock.advance(5.0)               # think gap: reuse looks cold
+    sess.resume()                           # synchronous restore stalls
+    led = traced.ledger.as_dict()
+    top = max((c for c in led if c not in ("total", "tenants")),
+              key=lambda c: led[c])
+    print(f"  every stalled second attributed: total "
+          f"{led['total']*1e6:.1f}us, dominated by '{top}'")
+    trace_path = pathlib.Path("quickstart_trace.json")
+    trace_path.write_text(traced.tracer.to_chrome_json() + "\n")
+    print(f"  causal trace: {trace_path} ({len(traced.tracer)} events) "
+          f"-> open at https://ui.perfetto.dev")
+
 
 if __name__ == "__main__":
     main()

@@ -103,8 +103,14 @@ def run_scenario(scenario: str, mode: str, *,
                  host: HostConfig = GPU_GDDR,
                  ssd: Optional[SsdConfig] = None,
                  seed: int = 0,
-                 sim_cfg=None) -> Dict[str, object]:
-    """One (scenario, policy) cell; returns a JSON-ready record."""
+                 sim_cfg=None,
+                 obs=None) -> Dict[str, object]:
+    """One (scenario, policy) cell; returns a JSON-ready record.
+
+    `obs` (a `repro.obs.Observability`) attaches the observability
+    plane: transfer spans, stall attribution and gate-decision instants
+    land in its tracer/metrics/ledger. The modeled record is identical
+    with or without it."""
     ssd = ssd or storage_next_ssd()
     trace = generate(scenario, n_steps=n_steps, step_time=step_time,
                      seed=seed)
@@ -125,8 +131,11 @@ def run_scenario(scenario: str, mode: str, *,
         Tier.FLASH: TierSpec(max(64 * total_bytes, 1 << 30), 7e9, 2e-5),
     }
     policy = _policy_for(mode, host, ssd, l_blk, alpha_accel, sim_cfg)
+    if obs is not None and hasattr(policy, "obs"):
+        policy.obs = obs
     clock = VirtualClock()
-    store = TieredStore(policy, specs=specs, clock=clock, sim_cfg=sim_cfg)
+    store = TieredStore(policy, specs=specs, clock=clock, sim_cfg=sim_cfg,
+                        obs=obs, label=f"{scenario}/{mode}")
     blob = np.zeros(max(l_blk // 4, 1), np.float32)
     put_tier = Tier.FLASH if mode == "flash" else Tier.DRAM
 

@@ -80,6 +80,13 @@ class EconomicGate(TieringPolicy):
         self.classify = classify
         self.prior_quantile = prior_quantile
         self.gate_stats = GateStats()
+        # observability: attached by the fabric/platform (tracer instants
+        # for every admit decision); `_priced_out` remembers keys this
+        # gate sent to FLASH against a warmer ask, so the stall ledger
+        # can bill their later restores to the *decision*
+        # (gate_miss_restore), not the media (flash_service)
+        self.obs = None
+        self._priced_out = set()
         # per-class (per-tenant) break-even overrides: a class's SLO
         # alpha_stall folds into its own tau_be (see `breakeven_tau`);
         # classes not listed fall back to the fleet-wide threshold
@@ -147,7 +154,29 @@ class EconomicGate(TieringPolicy):
         # the gate only ever *demotes* relative to the caller's ask
         decided = Tier(max(decided, requested))
         self._tier[key] = decided
+        # priced out = the gate denied a warmer ask; a flash-pinned put
+        # was never a decision and must not bill restores to the gate
+        if decided == Tier.FLASH and requested < Tier.FLASH:
+            self._priced_out.add(key)
+        else:
+            self._priced_out.discard(key)
+        if self.obs is not None and self.obs.tracer is not None:
+            t = self.obs.tracer
+            t.instant(t.track("gate", "admit"), "admit_tier", now,
+                      cat="policy",
+                      args={"key": str(key),
+                            "est": -1.0 if est is None else est,
+                            "source": source,
+                            "tau_be": self.tau_for(key),
+                            "requested": requested.name,
+                            "decided": decided.name})
         return decided
+
+    def priced_out(self, key) -> bool:
+        """Did this gate's last admission decision for `key` deny a
+        warmer tier? (`TieredStore` asks on flash fetches — the ledger's
+        gate_miss_restore attribution.)"""
+        return key in self._priced_out
 
     def tier_of(self, key) -> Tier:
         """Resident placement under the key's *own* class threshold
@@ -182,6 +211,8 @@ class EconomicGate(TieringPolicy):
         touch (priced by the class prior, not its dead predecessor)."""
         super().forget_keys(keys)
         self.tracker.forget_keys(keys)
+        for key in keys:
+            self._priced_out.discard(key)
 
     # ------------------------------------------------------------- eviction
     def evict_candidates(self, tier: Tier, now: Optional[float] = None,

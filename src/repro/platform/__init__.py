@@ -20,16 +20,17 @@ from .failover import default_failover_spec, run_failover_bench  # noqa: F401
 from .handles import Handle, KvSession  # noqa: F401
 from .roofline_hook import measured_step_time  # noqa: F401
 from .spec import (ArrivalDecl, AutoscaleDecl,  # noqa: F401
-                   HierarchySpec, HostDecl, NetDecl, PolicyDecl,
-                   SchedulerDecl, SessionShapeDecl, SloDecl, TenantDecl,
-                   TierDecl, TopologyDecl, WorkloadDecl)
+                   HierarchySpec, HostDecl, NetDecl, ObservabilityDecl,
+                   PolicyDecl, SchedulerDecl, SessionShapeDecl, SloDecl,
+                   TenantDecl, TierDecl, TopologyDecl, WorkloadDecl)
 from .workload import (CompiledWorkload, compile_workload,  # noqa: F401
                        tenant_classifier)
 
 __all__ = [
     "ArrivalDecl", "AutoscaleDecision", "AutoscaleDecl", "Autoscaler",
     "CompiledWorkload", "Handle", "HierarchySpec", "HostDecl",
-    "KvSession", "NetDecl", "Platform", "PolicyDecl", "SchedulerDecl",
+    "KvSession", "NetDecl", "ObservabilityDecl", "Platform",
+    "PolicyDecl", "SchedulerDecl",
     "SessionShapeDecl", "SloDecl", "TenantDecl", "TierDecl",
     "TopologyDecl", "WorkloadDecl",
     "compile_workload", "default_autoscale_spec",

@@ -34,6 +34,7 @@ from ..autopilot.advisor import ProvisionAdvice, ProvisionAdvisor
 from ..autopilot.gate import EconomicGate
 from ..autopilot.reuse import ReuseTracker
 from ..core.policy import TieringPolicy
+from ..obs import Observability
 from ..runtime.clock import VirtualClock, WallClock
 from ..runtime.fabric import RebalanceStats, ShardedTieredStore
 from ..runtime.service import NetQueueModel, SsdQueueModel
@@ -50,15 +51,33 @@ class Platform:
     def __init__(self, spec: HierarchySpec, clock, fabric, *,
                  tracker: Optional[ReuseTracker] = None,
                  advisor: Optional[ProvisionAdvisor] = None,
-                 step_time: float = 0.0):
+                 step_time: float = 0.0,
+                 obs: Optional[Observability] = None):
         self.spec = spec
         self.clock = clock
         self.fabric = fabric
         self.tracker = tracker
         self.advisor = advisor
         self.step_time = step_time
+        self.obs = obs if obs is not None else Observability()
         self._autoscaler = None
         self._workload = None
+
+    # ------------------------------------------------------ observability
+    @property
+    def tracer(self):
+        """Causal tracer (None unless spec.observability.trace)."""
+        return self.obs.tracer
+
+    @property
+    def metrics(self):
+        """`MetricsRegistry` (None when spec.observability.metrics off)."""
+        return self.obs.metrics
+
+    @property
+    def ledger(self):
+        """The fleet's always-on Eq. 1 stall ledger."""
+        return self.obs.ledger
 
     # ------------------------------------------------------------- compile
     @classmethod
@@ -144,6 +163,11 @@ class Platform:
                                       topology=topology)
             topology = None         # attached to the model, per fabric rule
 
+        obs_decl = spec.observability
+        obs = Observability(trace=obs_decl.trace,
+                            metrics=obs_decl.metrics,
+                            max_events=obs_decl.max_events)
+
         hosts = spec.expanded_hosts()
         fabric = ShardedTieredStore(
             host_specs=[h.tier_specs() for h in hosts],
@@ -151,7 +175,10 @@ class Platform:
             policy_factory=factory, clock=clock, sim_cfg=sim_cfg,
             net_model=net_model, topology=topology,
             write_shield_depth=spec.write_shield_depth,
-            vnodes=spec.vnodes, rebalance_rate=spec.rebalance_rate)
+            vnodes=spec.vnodes, rebalance_rate=spec.rebalance_rate,
+            obs=obs)
+        if obs.metrics is not None:
+            obs.metrics.register("fabric", fabric)
 
         if tracker is not None:
             template = spec.hosts[spec.autoscale.template]
@@ -162,7 +189,7 @@ class Platform:
                 active_window=spec.autoscale.active_window)
 
         return cls(spec, clock, fabric, tracker=tracker, advisor=advisor,
-                   step_time=spec.resolved_step_time())
+                   step_time=spec.resolved_step_time(), obs=obs)
 
     # -------------------------------------------------------- capabilities
     @property
@@ -230,12 +257,18 @@ class Platform:
         from ..serving.scheduler import ContinuousScheduler
         eng = self.engine(cfg, params, rules, host=host, **kw)
         decl = self.spec.scheduler
+        budgets = {}
+        if self.spec.workload is not None:
+            budgets = {t.name: t.slo.p99_stall_budget
+                       for t in self.spec.workload.tenants
+                       if t.slo.p99_stall_budget is not None}
         return ContinuousScheduler(
             eng,
             pause_idle_steps=decl.pause_idle_steps
             if pause_idle_steps is None else pause_idle_steps,
             prefetch_lead=decl.prefetch_lead
-            if prefetch_lead is None else prefetch_lead)
+            if prefetch_lead is None else prefetch_lead,
+            stall_budgets=budgets)
 
     # ------------------------------------------------------------ workload
     def workload(self):
@@ -321,7 +354,20 @@ class Platform:
         return self.fabric.drain()
 
     def reset_stats(self):
-        self.fabric.reset_stats()
+        """One reset for the whole platform, routed through the
+        metrics registry's snapshot/reset protocol: registered
+        components (fabric counters + per-host/NIC queue stats, the
+        stall ledger) and every counter/gauge/histogram reset together.
+        Falls back to direct resets when metrics are declared off."""
+        if self.obs.metrics is not None:
+            self.obs.metrics.reset()
+        else:
+            self.fabric.reset_stats()
+            self.obs.ledger.reset_stats()
+
+    def snapshot_stats(self) -> Dict[str, object]:
+        """Uniform stats snapshot (metrics + registered components)."""
+        return self.obs.snapshot_stats()
 
     def summary(self) -> Dict[str, float]:
         return self.fabric.summary()

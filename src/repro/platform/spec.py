@@ -283,6 +283,27 @@ class SchedulerDecl:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObservabilityDecl:
+    """Observability plane knobs (`repro.obs.Observability`, attached
+    by `Platform.compile`).
+
+    `metrics` keeps the array-backed `MetricsRegistry` on (counters,
+    gauges, log-bucket histograms; cheap enough for the 1M-key replay).
+    `trace` turns on the causal `Tracer` — Perfetto/Chrome trace_event
+    export of the full request lifecycle on the modeled clock — capped
+    at `max_events` non-metadata events. The Eq. 1 stall ledger is
+    *not* declared here: it is always on."""
+    trace: bool = False
+    metrics: bool = True
+    max_events: int = 200_000
+
+    def validate(self, path: str = "observability"):
+        if self.max_events < 1:
+            raise _err(path, f"max_events must be >= 1 (got "
+                             f"{self.max_events})")
+
+
+@dataclasses.dataclass(frozen=True)
 class ArrivalDecl:
     """When a tenant's sessions (and background objects) show up.
 
@@ -564,6 +585,7 @@ class HierarchySpec:
     #                                 engine session checkpoints (None=off)
     autoscale: AutoscaleDecl = AutoscaleDecl()
     scheduler: SchedulerDecl = SchedulerDecl()
+    observability: ObservabilityDecl = ObservabilityDecl()
     workload: Optional[WorkloadDecl] = None
 
     def __post_init__(self):
@@ -639,6 +661,7 @@ class HierarchySpec:
                        "(omit it to disable checkpointing)")
         self.autoscale.validate()
         self.scheduler.validate()
+        self.observability.validate()
         if self.workload is not None:
             if not isinstance(self.workload, WorkloadDecl):
                 raise _err("workload", f"expected WorkloadDecl, got "
@@ -746,13 +769,16 @@ class HierarchySpec:
         scheduler = d.pop("scheduler", None)
         scheduler = SchedulerDecl(**scheduler) if scheduler is not None \
             else SchedulerDecl()
+        observability = d.pop("observability", None)
+        observability = ObservabilityDecl(**observability) \
+            if observability is not None else ObservabilityDecl()
         workload = d.pop("workload", None)
         workload = WorkloadDecl.from_dict(workload) \
             if workload is not None else None
         weights = d.pop("weights", None)
         spec = cls(hosts=hosts, policy=policy, topology=topology,
                    net=net, autoscale=autoscale, scheduler=scheduler,
-                   workload=workload,
+                   observability=observability, workload=workload,
                    weights=tuple(weights) if weights is not None
                    else None, **d)
         return spec.validate()

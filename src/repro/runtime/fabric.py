@@ -103,6 +103,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.policy import Tier, TieringPolicy
+from ..obs.ledger import StallLedger
 from .async_engine import AsyncTierRuntime, Transfer
 from .clock import ensure_clock
 from .service import NetQueueModel
@@ -149,7 +150,18 @@ class RemoteFetch:
         if self._owner_failed_in_flight():
             # the sender died before delivery: degraded re-read from a
             # surviving holder (raises KeyError when the key was lost)
-            return self.fabric.get(self.pf.key, from_host=self.dst)
+            fab = self.fabric
+            if fab.obs is not None and fab.obs.tracer is not None:
+                t = fab.obs.tracer
+                t.instant(t.track("fabric", "failures"), "degraded_read",
+                          fab.clock.now(), cat="policy",
+                          args={"key": str(self.pf.key),
+                                "dead_owner": self.owner,
+                                "dst": self.dst})
+            if fab.obs is not None and fab.obs.metrics is not None:
+                fab.obs.metrics.counter("degraded_reads").inc(
+                    (f"host{self.dst}",))
+            return fab.get(self.pf.key, from_host=self.dst)
         if self.owner in self.fabric.failed:
             # both legs delivered before the failure instant; the dead
             # host's queues are gone, so skip its bookkeeping entirely
@@ -251,6 +263,18 @@ class HostView:
     def stats(self):
         return self.fabric.hosts[self.host].stats
 
+    @property
+    def obs(self):
+        return self.fabric.obs
+
+    @property
+    def ledger(self):
+        return self.fabric.ledger
+
+    @property
+    def label(self) -> str:
+        return f"host{self.host}"
+
     def put(self, key, value, tier: Tier = Tier.DRAM):
         self.fabric.put(key, value, tier=tier, from_host=self.host,
                         replicas=self.replicas)
@@ -293,7 +317,8 @@ class ShardedTieredStore:
                  net_model: Optional[NetQueueModel] = None,
                  write_shield_depth: Optional[int] = None,
                  vnodes: int = 64, topology=None,
-                 rebalance_rate: Optional[float] = None):
+                 rebalance_rate: Optional[float] = None,
+                 obs=None):
         if host_specs is not None:
             if n_hosts is not None and n_hosts != len(host_specs):
                 raise ValueError(
@@ -331,6 +356,12 @@ class ShardedTieredStore:
             raise ValueError(
                 "pass the topology on the net_model, not alongside it")
         self.net_model = net_model
+        # one observability plane (and ONE stall ledger) shared by every
+        # host runtime and NIC lane — cross-host stall lands in the same
+        # conservation-checked ledger as local stall
+        self.obs = obs
+        self.ledger: StallLedger = (obs.ledger if obs is not None
+                                    else StallLedger())
         self.hosts: Dict[int, TieredStore] = {}
         self.nic: Dict[int, AsyncTierRuntime] = {}
         self.host_ids: List[int] = []
@@ -385,9 +416,16 @@ class ShardedTieredStore:
             self._policy_factory(h),
             specs=specs if specs is not None else self._specs,
             clock=self.clock, sim_cfg=self._sim_cfg,
-            write_shield_depth=self._write_shield_depth)
+            write_shield_depth=self._write_shield_depth,
+            obs=self.obs, ledger=self.ledger, label=f"host{h}")
         self.nic[h] = AsyncTierRuntime(
-            clock=self.clock, service_models={NIC: self.net_model})
+            clock=self.clock, service_models={NIC: self.net_model},
+            obs=self.obs, ledger=self.ledger, label=f"host{h}")
+        # attach the gate's decision tracer (policy instants ride on the
+        # same tracer as the transfer spans)
+        policy = self.hosts[h].policy
+        if hasattr(policy, "obs"):
+            policy.obs = self.obs
         self.host_ids.append(h)
         return h
 
@@ -433,6 +471,7 @@ class ShardedTieredStore:
         destination's live sender fan-in (incast). Uniform models get the
         plain depth-only call."""
         ctx = None
+        incast_frac = 0.0
         if self.net_model.topology is not None:
             now = self.clock.now()
             self._nic_flows = [f for f in self._nic_flows
@@ -440,11 +479,31 @@ class ShardedTieredStore:
             senders = {s for t, s, d in self._nic_flows if d == dst}
             senders.add(src)
             ctx = {"src": src, "dst": dst, "fan_in": len(senders)}
+            if len(senders) > 1:
+                # the share of this transfer's service the incast
+                # penalty is responsible for: compare against the same
+                # hop at fan_in=1 (the ledger splits the service window
+                # into `incast` vs `nic_queue` by this fraction)
+                d = self.nic[src].queue_depth(NIC) + 1
+                act = self.net_model.service(nbytes, d, **ctx)
+                base = self.net_model.service(nbytes, d, src=src,
+                                              dst=dst, fan_in=1)
+                if act.total > 0:
+                    incast_frac = max(0.0, 1.0 - base.total / act.total)
         tr = self.nic[src].submit(NIC, key, nbytes, kind=kind,
                                   not_before=not_before, ctx=ctx)
+        tr.incast_frac = incast_frac
         if self.net_model.topology is not None:
             self._nic_flows.append((tr, src, dst))
         return tr
+
+    def _policy_instant(self, name: str, args: Dict) -> None:
+        """Fleet-level policy decision (join/leave/fail/rebalance) onto
+        the shared tracer's fabric track."""
+        if self.obs is not None and self.obs.tracer is not None:
+            t = self.obs.tracer
+            t.instant(t.track("fabric", "policy"), name,
+                      self.clock.now(), cat="policy", args=args)
 
     # ------------------------------------------------------------- routing
     def _key_point(self, key) -> int:
@@ -635,6 +694,8 @@ class ShardedTieredStore:
         heterogeneous fleet (defaults: the shared tier specs, weight 1)."""
         h = self._new_host(specs=specs, weight=weight)
         self._rebuild_ring()
+        self._policy_instant("autoscale_add_host",
+                             {"host": h, "weight": float(weight)})
         return self._rebalance("join", h)
 
     def remove_host(self, host: int) -> RebalanceStats:
@@ -649,6 +710,7 @@ class ShardedTieredStore:
             raise ValueError("cannot remove the last host")
         self.host_ids.remove(host)
         self._rebuild_ring()
+        self._policy_instant("autoscale_remove_host", {"host": host})
         rb = self._rebalance("leave", host, extra_sources=(host,))
         self.retired[host] = (self.hosts.pop(host), self.nic.pop(host))
         return rb
@@ -698,6 +760,11 @@ class ShardedTieredStore:
             keys_lost=len(lost), bytes_lost=bytes_lost,
             keys_degraded=degraded, lost_keys=tuple(lost))
         self.failures.append(report)
+        self._policy_instant("fail_host", report.as_dict())
+        if self.obs is not None and self.obs.metrics is not None:
+            m = self.obs.metrics
+            m.counter("host_failures").inc()
+            m.counter("keys_lost").inc(v=float(len(lost)))
         self._notify_key_loss(lost)
         return report
 
@@ -785,6 +852,7 @@ class ShardedTieredStore:
                 if h not in targets:
                     self.hosts[h].delete(key)
         self.rebalances.append(rb)
+        self._policy_instant("rebalance", rb.as_dict())
         return rb
 
     # ------------------------------------------------------------- control
@@ -819,6 +887,24 @@ class ShardedTieredStore:
         self.local_fetches = 0
         self.remote_fetches = 0
         self.remote_puts = 0
+
+    def snapshot_stats(self) -> Dict[str, object]:
+        """Fleet-wide stats as plain dicts: per-host stores (retired
+        included, keyed `retired{h}`), per-host NIC lanes, and the
+        fabric counters (the `MetricsRegistry` snapshot/reset
+        protocol)."""
+        out: Dict[str, object] = {
+            "hosts": {f"host{h}": self.hosts[h].snapshot_stats()
+                      for h in self.host_ids},
+            "nics": {f"host{h}": self.nic[h].snapshot_stats()
+                     for h in self.host_ids},
+            "retired": {f"retired{h}": s.snapshot_stats()
+                        for h, (s, _) in sorted(self.retired.items())},
+            "counters": {"local_fetches": self.local_fetches,
+                         "remote_fetches": self.remote_fetches,
+                         "remote_puts": self.remote_puts},
+        }
+        return out
 
     def resident_bytes(self) -> int:
         """One copy per resident key (the fleet's unique payload)."""

@@ -124,6 +124,8 @@ class RepairLoop:
                     break
             for key in pending[:self.batch_keys]:
                 self._repair_key(key, stats)
+        if stats.keys_repaired:
+            self.fabric._policy_instant("repair_pass", stats.as_dict())
         return stats
 
     def step(self) -> RepairStats:

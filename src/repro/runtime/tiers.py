@@ -132,7 +132,8 @@ class TieredStore:
     def __init__(self, policy: TieringPolicy,
                  specs: Optional[Dict[Tier, TierSpec]] = None,
                  clock=None, runtime: Optional[AsyncTierRuntime] = None,
-                 sim_cfg=None, write_shield_depth: Optional[int] = None):
+                 sim_cfg=None, write_shield_depth: Optional[int] = None,
+                 obs=None, ledger=None, label: str = "host0"):
         # defaults: v5e-host-like HBM/DRAM plus a Storage-Next SSD tier
         self.specs = specs or {
             Tier.HBM: TierSpec(16e9, 819e9, 1e-7),
@@ -147,7 +148,13 @@ class TieredStore:
             self.clock = ensure_clock(clock)
             self.runtime = AsyncTierRuntime(clock=self.clock,
                                             specs=self.specs,
-                                            sim_cfg=sim_cfg)
+                                            sim_cfg=sim_cfg, obs=obs,
+                                            ledger=ledger, label=label)
+        # the store's observability is its runtime's (one ledger, one
+        # label — the runtime is where stall materializes)
+        self.obs = self.runtime.obs
+        self.ledger = self.runtime.ledger
+        self.label = self.runtime.label
         self._data: Dict[Tier, Dict[object, np.ndarray]] = {
             t: {} for t in Tier}
         self._used = {t: 0 for t in Tier}
@@ -197,6 +204,14 @@ class TieredStore:
         self.stats = {t: TierStats() for t in Tier}
         self.runtime.reset_stats()
 
+    def snapshot_stats(self) -> Dict[str, object]:
+        """Per-tier `TierStats` plus the runtime's lane stats, as plain
+        dicts (the `MetricsRegistry` snapshot/reset protocol)."""
+        out: Dict[str, object] = {
+            t.name: dataclasses.asdict(st) for t, st in self.stats.items()}
+        out["runtime"] = self.runtime.snapshot_stats()
+        return out
+
     # ------------------------------------------------------------------ api
     def put(self, key, value: np.ndarray, tier: Tier = Tier.DRAM):
         value = np.asarray(value)
@@ -231,6 +246,13 @@ class TieredStore:
         value = self._data[cur][key]
         tr = self.runtime.submit(cur, key, value.nbytes, kind="fetch",
                                  not_before=self._arrival_gate(key))
+        if cur == Tier.FLASH:
+            # a flash restore of a key the gate priced out of DRAM is a
+            # *policy* cost, not a media cost — the ledger attributes its
+            # service seconds to gate_miss_restore
+            priced_out = getattr(self.policy, "priced_out", None)
+            if priced_out is not None and priced_out(key):
+                tr.gate_miss = True
         self.stats[cur].bytes_read += value.nbytes
         return PendingFetch(store=self, key=key, tier=cur, transfer=tr,
                             value=value)
@@ -331,6 +353,8 @@ class TieredStore:
             st.deferred_bytes += value.nbytes
             self._deferred_writes.append((tier, key, value.nbytes,
                                           not_before))
+            self._trace_deferral("rebalance_write_deferred", tier, key,
+                                 value.nbytes)
         else:
             self.runtime.submit(tier, key, value.nbytes, kind="write",
                                 not_before=not_before)
@@ -393,12 +417,22 @@ class TieredStore:
             st.demotions_deferred += 1
             st.deferred_bytes += v.nbytes
             self._deferred_writes.append((dst, key, v.nbytes, None))
+            self._trace_deferral("demotion_write_deferred", dst, key,
+                                 v.nbytes)
         else:
             self.runtime.submit(dst, key, v.nbytes, kind="write")
         if demote:
             self.stats[dst].demotions += 1
         else:
             self.stats[dst].promotions += 1
+
+    def _trace_deferral(self, name: str, tier: Tier, key,
+                        nbytes: int) -> None:
+        if self.obs is not None and self.obs.tracer is not None:
+            t = self.obs.tracer
+            t.instant(t.track(self.label, tier.name), name,
+                      self.clock.now(), cat="shield",
+                      args={"key": str(key), "nbytes": int(nbytes)})
 
     # ----------------------------------------------------- write shielding
     def _shielded(self, tier: Tier) -> bool:

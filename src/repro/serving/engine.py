@@ -184,6 +184,10 @@ class DecodeEngine:
         self.clock = self.store.clock
         self.step_time = step_time      # modeled seconds of decode compute
         self.kv_stall_time = 0.0        # decode-visible restore stalls
+        # observability rides in on the store (single-host or fabric
+        # view): session lifecycle instants + causal flows join the
+        # transfer spans the runtime already records
+        self.obs = getattr(self.store, "obs", None)
         self._paused: Dict[str, tuple] = {}
         self._pending: Dict[str, object] = {}   # rid -> PendingFetch
         # periodic session durability: every `checkpoint_interval` decode
@@ -211,6 +215,26 @@ class DecodeEngine:
         self._decode = jax.jit(functools.partial(
             model_lib.decode_step, cfg=cfg, rules=rules,
             compute_dtype=compute_dtype))
+
+    # -------------------------------------------------------- observability
+    def _trace_session(self, name: str, rid: str, flow: str = "",
+                       **args) -> None:
+        """Session-lifecycle instant on this engine's track; `flow`
+        ("s"/"t"/"f") stitches the event into the session's causal
+        chain (admission -> prefetch -> fetch spans -> resume)."""
+        if self.obs is None or self.obs.tracer is None:
+            return
+        t = self.obs.tracer
+        track = t.track(f"host{self.host}", "engine")
+        now = self.clock.now()
+        t.instant(track, name, now, cat="session",
+                  args={"rid": rid, **args})
+        if flow == "s":
+            t.flow_start(track, f"session:{rid}", now, ("session", rid))
+        elif flow == "t":
+            t.flow_step(track, f"session:{rid}", now, ("session", rid))
+        elif flow == "f":
+            t.flow_end(track, f"session:{rid}", now, ("session", rid))
 
     # ------------------------------------------------------------ admission
     def _free_slots(self) -> List[int]:
@@ -259,6 +283,8 @@ class DecodeEngine:
         first = int(np.argmax(np.asarray(logits[0]))) if self.greedy else 0
         req.generated.append(first)
         self.last_token[slot] = first
+        self._trace_session("admit", req.rid, flow="s", slot=slot,
+                            prompt_len=S)
         return slot
 
     def _splice_slot(self, src_cache, slot: int, src_idx: int = 0):
@@ -308,7 +334,10 @@ class DecodeEngine:
         self.live[slot] = False
         self.active[slot] = False
         self.lengths[slot] = 0
-        return self.store.tier_of(("kv", rid))
+        tier = self.store.tier_of(("kv", rid))
+        self._trace_session("pause", rid, flow="t", slot=slot,
+                            tier=getattr(tier, "name", str(tier)))
+        return tier
 
     def park(self, rid: str) -> int:
         """Idle a live session in place: the slot and its KV stay
@@ -442,6 +471,7 @@ class DecodeEngine:
             raise KeyError(rid)
         if rid not in self._pending:
             self._pending[rid] = self.store.get_async(("kv", rid))
+            self._trace_session("prefetch", rid, flow="t")
         return self._pending[rid]
 
     def prefetch_many(self, rids):
@@ -468,7 +498,10 @@ class DecodeEngine:
             pf = self.store.get_async(("kv", rid))
         t0 = self.clock.now()
         blob = pf.wait()
-        self.kv_stall_time += self.clock.now() - t0
+        stall = self.clock.now() - t0
+        self.kv_stall_time += stall
+        self._trace_session("resume", rid, flow="f", slot=slot,
+                            stall=stall)
         leaves, off = [], 0
         for shape, dtype in shapes:
             n = int(np.prod(shape))

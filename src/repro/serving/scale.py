@@ -94,7 +94,8 @@ def scale_replay(*, n_keys: int = 1_000_000, n_sessions: int = 100_000,
                  l_blk: int = 128 << 10, tau_be: float = 5.0,
                  step_time: float = 0.25, zipf_alpha: float = 3.0,
                  seed: int = 0, sim_cfg=None,
-                 trace: Optional[List[np.ndarray]] = None
+                 trace: Optional[List[np.ndarray]] = None,
+                 obs=None
                  ) -> Tuple[Dict[str, float], Dict[str, float]]:
     """Replay the scale trace through the vectorized control plane.
 
@@ -105,7 +106,15 @@ def scale_replay(*, n_keys: int = 1_000_000, n_sessions: int = 100_000,
     mixed into the modeled numbers). Pass `trace` (per-step id arrays,
     ids < n_sessions classed "kv", the rest "obj") to replay a custom
     access pattern — e.g. a `CompiledWorkload.id_steps()` rendering —
-    instead of the generated one."""
+    instead of the generated one.
+
+    `obs` (a `repro.obs.Observability`) keeps the metrics plane on
+    during the replay: per-step batch observes into array-backed
+    counters/gauges/histograms (per-host routing labels included) plus
+    the step stall booked to the ledger's `flash_service` component.
+    The modeled `record` is byte-identical with or without it; the
+    metric cost lands in its own `timings["metrics"]` section (CI
+    guards the total at <= 1.25x the metrics-off wall time)."""
     if dram_capacity_keys is None:
         dram_capacity_keys = n_keys // 10
     if trace is None:
@@ -143,8 +152,19 @@ def scale_replay(*, n_keys: int = 1_000_000, n_sessions: int = 100_000,
                 "sketch_updates": 0, "admitted": 0, "evicted": 0,
                 "dram_hits": 0, "flash_misses": 0, "first_touches": 0}
     timings = {"digest": t_digest, "routing": 0.0, "tracking": 0.0,
-               "admission": 0.0, "stall_pricing": 0.0}
+               "admission": 0.0, "stall_pricing": 0.0, "metrics": 0.0}
     total_stall = 0.0
+
+    metrics = obs.metrics if obs is not None else None
+    ledger = obs.ledger if obs is not None else None
+    if metrics is not None:
+        m_acc = metrics.counter("scale_accesses")
+        m_hits = metrics.counter("scale_dram_hits")
+        m_miss = metrics.counter("scale_flash_misses")
+        m_routed = metrics.counter("scale_routed")
+        m_res = metrics.gauge("scale_dram_resident")
+        m_stall = metrics.histogram("scale_step_stall")
+        host_labels = [(f"host{h}",) for h in range(n_hosts)]
 
     for t, ids in enumerate(trace):
         n = ids.size
@@ -201,10 +221,26 @@ def scale_replay(*, n_keys: int = 1_000_000, n_sessions: int = 100_000,
         counters["admitted"] += int(admit.sum())
         w4 = time.perf_counter()
 
+        if ledger is not None and stall:
+            # coarse Eq. 1 attribution for the vectorized path: the
+            # whole priced step stall is flash service time
+            ledger.add("flash_service", stall)
+        if metrics is not None:
+            m_acc.inc(v=float(n))
+            m_hits.inc(v=float(n - n_miss))
+            m_miss.inc(v=float(n_miss))
+            m_res.set(v=float(resident.sum()))
+            m_stall.observe(stall)
+            routed = np.bincount(owners, minlength=n_hosts)
+            for h in range(n_hosts):
+                m_routed.inc(host_labels[h], float(routed[h]))
+        w5 = time.perf_counter()
+
         timings["routing"] += w1 - w0
         timings["tracking"] += w2 - w1
         timings["admission"] += w3 - w2
         timings["stall_pricing"] += w4 - w3
+        timings["metrics"] += w5 - w4
 
     accesses = counters["accesses"]
     record = {

@@ -44,6 +44,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from ..obs.ledger import COMPONENTS, StallLedger
 from .engine import DecodeEngine, Request
 
 
@@ -102,10 +103,24 @@ class ContinuousScheduler:
 
     def __init__(self, engine: DecodeEngine, *,
                  pause_idle_steps: int = 0,
-                 prefetch_lead="p99"):
+                 prefetch_lead="p99",
+                 stall_budgets: Optional[Dict[str, float]] = None):
         self.engine = engine
         self.pause_idle_steps = int(pause_idle_steps)
         self.prefetch_lead = prefetch_lead
+        self.obs = getattr(engine, "obs", None)
+        # adopt the store's always-on stall ledger (TieredStore and the
+        # fabric's HostView both expose one); idle-slot rent lands there
+        # under the identical condition `slot_idle_steps` counts, which
+        # is what makes the conservation law in report() exact
+        ledger = getattr(engine.store, "ledger", None)
+        self.ledger = ledger if ledger is not None else StallLedger()
+        self._ledger_base = self.ledger.snapshot()
+        self._ledger_tenant_base = {
+            t: dict(v) for t, v in self.ledger.tenants.items()}
+        # tenant -> declared p99 stall budget (sec/token); report()
+        # derives each tenant's budget burn from its ledger slice
+        self.stall_budgets = dict(stall_budgets) if stall_budgets else {}
         self.now = 0                    # tick index (== decode steps + idle)
         self.jobs: Dict[str, SessionJob] = {}
         self._waiting: List[tuple] = []  # heap of (due, seq, job)
@@ -165,6 +180,17 @@ class ContinuousScheduler:
             self.tenant_metrics[job.tenant] = m
         m[field] += by
 
+    def _trace(self, name: str, **args):
+        """Scheduler policy instant on the modeled clock (no-op unless
+        an `Observability` with tracing is attached to the engine)."""
+        obs = self.obs
+        if obs is None or obs.tracer is None:
+            return
+        t = obs.tracer
+        args["tick"] = self.now
+        t.instant(t.track("scheduler", "policy"), name,
+                  self.engine.clock.now(), cat="policy", args=args)
+
     # --------------------------------------------------------------- tick
     def tick(self):
         """One scheduler step: arrivals -> prefetch -> admission ->
@@ -186,6 +212,8 @@ class ContinuousScheduler:
                 if self.now > job.deadline():
                     self.metrics["deadline_misses"] += 1
                     self._bump(job, "deadline_misses")
+                    self._trace("deadline_miss", sid=job.sid,
+                                deadline=job.deadline())
             else:
                 self._push_ready(job)
         # 2. prefetch-led resume for paused sessions nearing their due
@@ -213,9 +241,13 @@ class ContinuousScheduler:
                 eng.store.runtime.advance(eng.step_time)
             self.metrics["idle_ticks"] += 1
         if self.pending_work():
-            self.metrics["slot_idle_steps"] += eng.max_slots - decoding
+            idle_slots = eng.max_slots - decoding
+            self.metrics["slot_idle_steps"] += idle_slots
             self.metrics["parked_slot_steps"] += int(
                 (eng.live & ~eng.active).sum())
+            if idle_slots and eng.step_time:
+                self.ledger.add("scheduler_idle",
+                                eng.step_time * idle_slots)
         self.metrics["ticks"] += 1
         self.now += 1
         # 5. turn boundaries: pause-on-idle / park / retire
@@ -239,6 +271,7 @@ class ContinuousScheduler:
         self.metrics["pauses"] += 1
         self.metrics["preempt_pauses"] += 1
         self._bump(victim, "pauses")
+        self._trace("preempt_pause", sid=victim.sid, due=victim.due())
         return True
 
     def _admit(self, job: SessionJob):
@@ -263,6 +296,8 @@ class ContinuousScheduler:
         if self.now > job.deadline():
             self.metrics["deadline_misses"] += 1
             self._bump(job, "deadline_misses")
+            self._trace("deadline_miss", sid=job.sid,
+                        deadline=job.deadline())
 
     def _turn_boundaries(self):
         eng = self.engine
@@ -316,10 +351,38 @@ class ContinuousScheduler:
         idle_cost = eng.step_time * m["slot_idle_steps"]
         m["per_token_stall"] = ((eng.kv_stall_time + idle_cost)
                                 / max(tokens, 1))
+        m["stall_ledger"] = self.stall_ledger()
         tenants = self.tenant_report()
         if tenants:
+            for name, cell in tenants.items():
+                tled = self._tenant_ledger(name)
+                cell["ledger_stall"] = sum(tled.values())
+                budget = self.stall_budgets.get(name)
+                if budget:
+                    # burn rate of the declared SLO budget: ledger
+                    # seconds spent / (budget sec-per-token * tokens);
+                    # > 1.0 means the tenant's stall budget is blown
+                    cell["budget_burn"] = (
+                        cell["ledger_stall"]
+                        / (budget * max(cell["tokens"], 1)))
             m["tenants"] = tenants
         return m
+
+    # ------------------------------------------------------- stall ledger
+    def stall_ledger(self) -> Dict[str, float]:
+        """Eq. 1 decomposition of this run's stalled seconds (delta
+        since construction, so a shared fleet ledger reports only this
+        scheduler's slice). Conservation law, enforced by tests:
+        `total == kv_stall + step_time * slot_idle_steps` to 1e-9."""
+        led = self.ledger.delta_since(self._ledger_base)
+        led["total"] = sum(led[c] for c in COMPONENTS)
+        return led
+
+    def _tenant_ledger(self, tenant: str) -> Dict[str, float]:
+        cur = self.ledger.tenants.get(tenant, {})
+        base = self._ledger_tenant_base.get(tenant, {})
+        return {c: cur.get(c, 0.0) - base.get(c, 0.0)
+                for c in COMPONENTS}
 
     def tenant_report(self) -> Dict[str, Dict[str, float]]:
         """Per-tenant SLO accounting over tagged jobs: token/stall
@@ -345,8 +408,12 @@ class ContinuousScheduler:
             d["per_token_stall"] = d["stall"] / max(d["tokens"], 1)
             d["p99_per_token_stall"] = float(
                 np.percentile(np.array(samples[name]), 99))
-            for k, v in self.tenant_metrics.get(name, {}).items():
-                d[k] = v
+            # uniform cells: a tenant that never hit an event path (or
+            # was never admitted at all) still reports zeroed counters,
+            # so downstream JSON diffs compare keys, not key *sets*
+            for k in ("admissions", "resumes", "unparks", "parks",
+                      "pauses", "deadline_misses"):
+                d[k] = self.tenant_metrics.get(name, {}).get(k, 0)
         return {k: out[k] for k in sorted(out)}
 
 

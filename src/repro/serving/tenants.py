@@ -116,9 +116,13 @@ def _without_tenant(spec: HierarchySpec, name: str) -> HierarchySpec:
 
 
 def _run_arm(spec: HierarchySpec, cfg, params, rules, *,
-             max_slots: int, max_len: int) -> Dict[str, object]:
+             max_slots: int, max_len: int,
+             trace_sink: Optional[Dict[str, object]] = None,
+             arm: str = "") -> Dict[str, object]:
     from ..platform.compiler import Platform
     platform = Platform.compile(spec)
+    if trace_sink is not None and platform.tracer is not None:
+        trace_sink[arm] = platform.tracer
     sched = platform.scheduler(cfg, params, rules, max_slots=max_slots,
                                max_len=max_len)
     report = sched.run(platform.jobs(vocab=cfg.vocab))
@@ -134,13 +138,17 @@ def _run_arm(spec: HierarchySpec, cfg, params, rules, *,
 
 
 def run_tenant_bench(spec: Optional[HierarchySpec] = None, *,
-                     max_slots: int = 4, max_len: int = 64
+                     max_slots: int = 4, max_len: int = 64,
+                     trace_sink: Optional[Dict[str, object]] = None
                      ) -> Dict[str, object]:
     """Replay the pack through all three arms and judge the SLOs.
 
     Returns a deterministic, JSON-serializable dict: per-arm scheduler
-    reports (with per-tenant p99 stall accounting), per-arm thresholds,
-    declared budgets, and the isolation verdicts."""
+    reports (with per-tenant p99 stall accounting, the Eq. 1 stall
+    ledger and budget burn), per-arm thresholds, declared budgets, and
+    the isolation verdicts. When the spec declares
+    `observability.trace`, pass `trace_sink={}` to collect each arm's
+    `Tracer` (arm name -> tracer) for Perfetto export."""
     import jax
     from ..configs import get_config
     from ..models import model as M
@@ -164,7 +172,8 @@ def run_tenant_bench(spec: Optional[HierarchySpec] = None, *,
                  "step_time": STEP_TIME}}
     for name, arm_spec in arms.items():
         out[name] = _run_arm(arm_spec, cfg, params, rules,
-                             max_slots=max_slots, max_len=max_len)
+                             max_slots=max_slots, max_len=max_len,
+                             trace_sink=trace_sink, arm=name)
 
     budgets = {t.name: t.slo.p99_stall_budget
                for t in spec.workload.tenants

@@ -1,0 +1,539 @@
+"""Causal trace + metrics plane tests: the Eq. 1 stall ledger's
+conservation law, component attribution on every lane, the
+array-backed metrics registry (including the grow-past-capacity
+regression), byte-stable Perfetto export, and the canonical bench-JSON
+emit helper.
+
+The load-bearing invariant: every modeled stalled second lands in
+exactly one ledger component, and on a scheduler run
+
+    sum(components) == kv_stall_time + step_time * slot_idle_steps
+                    == per_token_stall * tokens
+
+to 1e-9 relative. The attribution tests below construct one scenario
+per component (flash service, NIC queueing, incast fan-in, rebalance
+interference, gate-miss restores, scheduler idle, DRAM residuals) so a
+regression names the queue it came from, not just "stall went up".
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.autopilot.gate import EconomicGate
+from repro.core.policy import Tier, TieringPolicy
+from repro.obs import (COMPONENTS, Counter, Gauge, Histogram,
+                       MetricsRegistry, Observability, StallLedger,
+                       Tracer, bench_json, canon, write_bench_json)
+from repro.obs.ledger import tenant_of_key
+from repro.runtime.clock import VirtualClock
+from repro.runtime.fabric import ShardedTieredStore
+from repro.runtime.service import FabricTopology, NetQueueModel
+from repro.runtime.tiers import TieredStore
+
+REL_TOL = 1e-9
+
+
+def _pinned_flash():
+    return TieringPolicy(tau_hot=1e-12, tau_be=1e-9, ema_alpha=1.0)
+
+
+def _rel_err(a: float, b: float) -> float:
+    return abs(a - b) / max(abs(a), abs(b), 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# StallLedger unit behavior
+# ---------------------------------------------------------------------------
+
+def test_ledger_components_and_conservation_bookkeeping():
+    led = StallLedger()
+    led.add("flash_service", 1.5, "prem")
+    led.add("scheduler_idle", 0.5)
+    led.add("nope", 0.25)                   # unknown -> other
+    assert led.totals["other"] == 0.25
+    assert led.total() == pytest.approx(2.25)
+    d = led.as_dict()
+    assert d["total"] == pytest.approx(2.25)
+    assert set(COMPONENTS) <= set(d)
+    assert d["tenants"]["prem"]["flash_service"] == 1.5
+    # zero adds must not materialize tenant rows
+    led.add("flash_service", 0.0, "ghost")
+    assert "ghost" not in led.tenants
+
+
+def test_ledger_delta_since_and_reset():
+    led = StallLedger()
+    led.add("nic_queue", 1.0)
+    base = led.snapshot()
+    led.add("nic_queue", 0.75)
+    led.add("incast", 0.25)
+    d = led.delta_since(base)
+    assert d["nic_queue"] == pytest.approx(0.75)
+    assert d["incast"] == pytest.approx(0.25)
+    assert d["flash_service"] == 0.0
+    led.reset_stats()
+    assert led.total() == 0.0 and led.tenants == {}
+
+
+def test_tenant_of_key_conventions():
+    assert tenant_of_key(("kv", "premium/003")) == "premium"
+    assert tenant_of_key(("kv", "bare")) == ""       # no tenant tag
+    assert tenant_of_key(("obj", "a/b")) == ""       # not a KV key
+    assert tenant_of_key("kv") == ""
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry
+# ---------------------------------------------------------------------------
+
+def test_counter_grows_past_initial_capacity():
+    """Regression: `vals[rowof(label)] += v` bound the pre-growth array
+    before `_rowof` replaced it, so label #9 raised IndexError."""
+    c = Counter("hosts")
+    for i in range(40):
+        c.inc((f"host{i}",), 2.0)
+    for i in range(40):
+        assert c.value((f"host{i}",)) == 2.0
+    assert len(c.labels()) == 40
+
+
+def test_gauge_set_grows_and_overwrites():
+    g = Gauge("resident")
+    for i in range(20):
+        g.set((f"h{i}",), float(i))
+    g.set(("h3",), 99.0)
+    assert g.value(("h3",)) == 99.0
+    g.inc(("h3",), 1.0)                    # gauges may accumulate too
+    assert g.value(("h3",)) == 100.0
+
+
+def test_histogram_batch_observe_and_quantiles():
+    h = Histogram("stall", n_buckets=24, tau0=1e-6)
+    vals = np.full(1000, 1e-3)
+    h.observe_batch(vals, ("host0",))
+    h.observe(0.0, ("host0",))             # exact zero -> bucket 0
+    assert h.count(("host0",)) == 1001
+    assert h.sum(("host0",)) == pytest.approx(1.0)
+    p50 = h.quantile(0.5, ("host0",))
+    assert 1e-3 / 2 <= p50 <= 2e-3         # bucket-center resolution
+    assert h.quantile(0.5, ("nolabel",)) is None
+    d = h.as_dict()["host0"]
+    assert d["count"] == 1001 and d["p99"] >= d["p50"]
+
+
+def test_registry_register_enforces_protocol():
+    reg = MetricsRegistry()
+
+    class Good:
+        def snapshot_stats(self):
+            return {"x": 1}
+
+        def reset_stats(self):
+            pass
+
+    class Bad:
+        def snapshot_stats(self):
+            return {}
+
+    reg.register("good", Good())
+    with pytest.raises(TypeError, match="reset_stats"):
+        reg.register("bad", Bad())
+    assert reg.components() == ["good"]
+    snap = reg.snapshot()
+    assert snap["components"]["good"] == {"x": 1}
+
+
+def test_registry_reset_walks_metrics_and_components():
+    reg = MetricsRegistry()
+    reg.counter("n").inc(("a",), 5.0)
+    reg.gauge("g").set(("a",), 3.0)
+    reg.histogram("h").observe(1.0)
+    led = StallLedger()
+    led.add("other", 1.0)
+    reg.register("stall_ledger", led)
+    reg.reset()
+    assert reg.counter("n").value(("a",)) == 0.0
+    assert reg.gauge("g").value(("a",)) == 0.0
+    assert reg.histogram("h").count() == 0.0
+    assert led.total() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Canonical bench JSON
+# ---------------------------------------------------------------------------
+
+def test_canon_folds_numpy_and_nonfinite():
+    obj = {"a": np.float64(1.5), "n": np.int32(3),
+            "arr": np.arange(3), "inf": float("inf"),
+            "nan": float("nan"), "neg": float("-inf")}
+    c = canon(obj)
+    assert c["a"] == 1.5 and c["n"] == 3 and c["arr"] == [0, 1, 2]
+    assert c["inf"] == "inf" and c["neg"] == "-inf" and c["nan"] == "nan"
+    json.dumps(c)                          # round-trips without error
+
+
+def test_bench_json_bytes_independent_of_insertion_order(tmp_path):
+    a = {"z": 1, "a": {"y": 2.0, "x": [3, {"k": 4}]}}
+    b = {"a": {"x": [3, {"k": 4}], "y": 2.0}, "z": 1}
+    assert bench_json(a) == bench_json(b)
+    out = tmp_path / "r.json"
+    js = write_bench_json(a, out=out, echo=False)
+    assert out.read_text() == js + "\n"
+    assert json.loads(js) == json.loads(bench_json(b))
+
+
+# ---------------------------------------------------------------------------
+# Tracer / Perfetto export
+# ---------------------------------------------------------------------------
+
+def test_tracer_chrome_json_shape():
+    t = Tracer()
+    track = t.track("host0", "FLASH")
+    t.complete(track, "fetch", 1.0, 0.5, cat="transfer",
+               args={"key": "k"})
+    t.instant(t.track("scheduler", "policy"), "admit_tier", 1.25,
+              cat="policy", args={"tau_be": 5.0})
+    fid = t.flow_id(("kv", "s0"))
+    t.flow_start(track, "session", 1.0, fid)
+    t.flow_end(track, "session", 1.5, fid)
+    doc = json.loads(t.to_chrome_json())
+    evs = doc["traceEvents"]
+    phases = {e["ph"] for e in evs}
+    assert {"X", "i", "M", "s", "f"} <= phases
+    x = next(e for e in evs if e["ph"] == "X")
+    assert x["ts"] == pytest.approx(1.0e6)    # seconds -> microseconds
+    assert x["dur"] == pytest.approx(0.5e6)
+    assert doc["otherData"]["dropped_events"] == 0
+    # process/thread metadata names both tracks
+    names = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"host0", "scheduler"} <= names
+
+
+def test_tracer_caps_events_and_counts_drops():
+    t = Tracer(max_events=4)
+    track = t.track("h", "lane")
+    for i in range(10):
+        t.instant(track, f"e{i}", float(i))
+    # 2 metadata events (track names) + 2 instants fit; 8 drop
+    assert len(t) == 4 and t.dropped == 8
+    doc = json.loads(t.to_chrome_json())
+    assert doc["otherData"]["dropped_events"] == 8
+    # metadata events bypass the cap: the track stays named
+    assert any(e["ph"] == "M" for e in doc["traceEvents"])
+
+
+def test_flamegraph_aggregates_span_time():
+    t = Tracer()
+    tr = t.track("host0", "FLASH")
+    t.complete(tr, "fetch", 0.0, 1.0)
+    t.complete(tr, "fetch", 2.0, 0.5)
+    t.complete(tr, "write", 2.0, 0.25)
+    lines = t.flamegraph().splitlines()
+    assert "host0;FLASH;fetch 1500000" in lines[0]  # µs, sorted desc
+
+
+# ---------------------------------------------------------------------------
+# Ledger attribution: one scenario per component
+# ---------------------------------------------------------------------------
+
+def test_flash_service_attribution_after_demotion():
+    """Repeat accesses past tau_be demote the key to flash; the next
+    fetch's seconds land in flash_service (tenant-attributed)."""
+    clock = VirtualClock()
+    store = TieredStore(_pinned_flash(), clock=clock)
+    key = ("kv", "prem/000")
+    store.put(key, np.zeros(4096, np.float32), tier=Tier.DRAM)
+    clock.advance(1.0)
+    store.get(key)                       # DRAM fetch -> "other", demotes
+    assert store.ledger.totals["other"] > 0
+    clock.advance(1.0)
+    store.get(key)                       # now resident on flash
+    led = store.ledger
+    assert led.totals["flash_service"] > 0
+    assert led.tenants["prem"]["flash_service"] == pytest.approx(
+        led.totals["flash_service"])
+    # media cost, not a policy cost: no gate in play
+    assert led.totals["gate_miss_restore"] == 0.0
+
+
+def test_gate_miss_restore_attribution():
+    """A key the EconomicGate priced out of DRAM restores from flash;
+    those seconds are a policy cost (gate_miss_restore), distinct from
+    an honestly-cold flash_service fetch."""
+    obs = Observability()
+    clock = VirtualClock()
+    gate = EconomicGate(tau_hot=1e-4, tau_be=1e-3)
+    store = TieredStore(gate, clock=clock, obs=obs, label="host0")
+    key = ("kv", "prem/000")
+    blob = np.zeros(4096, np.float32)
+    store.put(key, blob)
+    clock.advance(1.0)
+    store.get(key)                       # measured gap 1 s >> tau_be
+    clock.advance(1.0)
+    store.put(key, blob)                 # re-put: priced straight out
+    assert store.tier_of(key) == Tier.FLASH
+    assert gate.priced_out(key)
+    clock.advance(1.0)
+    store.get(key)
+    assert obs.ledger.totals["gate_miss_restore"] > 0
+    assert obs.ledger.totals["flash_service"] == 0.0
+    assert "prem" in obs.ledger.tenants
+
+
+def _quiet_fabric(n_hosts, clock, obs, **kw):
+    return ShardedTieredStore(
+        n_hosts, clock=clock, obs=obs,
+        policy_factory=lambda h: TieringPolicy(
+            tau_hot=1e-12, tau_be=1e9, ema_alpha=1.0),
+        **kw)
+
+
+def test_nic_queue_attribution_on_remote_fetch():
+    obs = Observability()
+    clock = VirtualClock()
+    fab = _quiet_fabric(4, clock, obs)
+    key = ("kv", "t0/000")
+    own = fab.owner(key)
+    fab.put(key, np.zeros(1 << 16, np.float32), from_host=own)
+    clock.advance(1.0)
+    fab.get(key, from_host=(own + 1) % 4)
+    assert obs.ledger.totals["nic_queue"] > 0
+    assert obs.ledger.totals["incast"] == 0.0    # no topology model
+
+
+def test_incast_attribution_under_fan_in():
+    """With a topology model, many senders fanning into one host divide
+    its ingress bandwidth; the ledger splits those NIC seconds into the
+    fan-in share (incast) vs the base wire time (nic_queue)."""
+    obs = Observability()
+    clock = VirtualClock()
+    topo = FabricTopology(hosts_per_rack=2, incast_degree=2)
+    fab = _quiet_fabric(4, clock, obs,
+                        net_model=NetQueueModel(topology=topo))
+    blob = np.zeros(1 << 18, np.float32)
+    keys = [("kv", f"t/{i:03d}") for i in range(12)]
+    for k in keys:
+        fab.put(k, blob, from_host=fab.owner(k))
+    clock.advance(1.0)
+    dst = 0
+    pfs = [fab.get_async(k, from_host=dst) for k in keys
+           if fab.owner(k) != dst]
+    assert max(pf.nic_tr.incast_frac for pf in pfs) > 0
+    # wait the deepest fan-in transfer first so its stall is real
+    # (waited last, it would have completed in the background)
+    for pf in sorted(pfs, key=lambda p: -p.nic_tr.incast_frac):
+        pf.wait()
+    assert obs.ledger.totals["incast"] > 0
+    assert obs.ledger.totals["nic_queue"] > 0
+
+
+def test_interference_attribution_behind_rebalance():
+    """A fetch queued behind a host-join rebalance stream charges its
+    queue wait to interference, not the lane's own service."""
+    obs = Observability()
+    clock = VirtualClock()
+    fab = _quiet_fabric(2, clock, obs)
+    blob = np.zeros(1 << 16, np.float32)
+    for i in range(24):
+        k = ("kv", f"a/{i:03d}")
+        fab.put(k, blob, from_host=fab.owner(k))
+    clock.advance(1.0)
+    fab.add_host()                        # rebalance streams kick off
+    k0 = ("kv", "a/000")
+    fab.get(k0, from_host=fab.owner(k0))
+    assert obs.ledger.totals["interference"] > 0
+
+
+def _fabric_stall_sum(fab) -> float:
+    """Total stall the fabric's runtimes materialized (every lane of
+    every live + retired host store and NIC) — what the shared ledger
+    must conserve for non-scheduler runs."""
+    total = 0.0
+    for store in fab._all_stores():
+        total += sum(q.stall_time for q in store.runtime.qstats.values())
+    for nic in fab._all_nics():
+        total += sum(q.stall_time for q in nic.qstats.values())
+    return total
+
+
+def test_failover_degraded_reads_conserve_ledger():
+    """Unplanned host failure: in-flight fetches fall back to degraded
+    reads from a surviving replica; every stalled second still lands in
+    the one shared ledger (conservation against the lane stats)."""
+    obs = Observability()
+    clock = VirtualClock()
+    fab = _quiet_fabric(3, clock, obs)
+    blob = np.zeros(1 << 16, np.float32)
+    keys = [("kv", f"s/{i:03d}") for i in range(12)]
+    for k in keys:
+        fab.put(k, blob, from_host=fab.owner(k), replicas=2)
+    clock.advance(1.0)
+    victim = fab.owner(keys[0])
+
+    def non_holder(k):
+        # force the remote composition: fetch from the one host (3
+        # hosts, 2 replicas) that does not hold a copy
+        return next(h for h in fab.host_ids if h not in fab.holders(k))
+
+    pfs = [fab.get_async(k, from_host=non_holder(k)) for k in keys]
+    fab.fail_host(victim)
+    got = 0
+    for pf in pfs:
+        try:
+            pf.wait()
+            got += 1
+        except KeyError:
+            pass                          # sole copy died with the host
+    assert got == len(keys)               # replicas=2 saved every key
+    assert obs.metrics.counter("degraded_reads").as_dict()
+    lane_stall = _fabric_stall_sum(fab)
+    assert lane_stall > 0
+    assert _rel_err(obs.ledger.total(), lane_stall) <= REL_TOL
+
+
+# ---------------------------------------------------------------------------
+# Conservation on scheduler scenario replays (needs the jax model)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.parallel.sharding import single_device_rules
+    cfg = get_config("gemma-2b", reduced=True)
+    rules = single_device_rules()
+    params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, rules, params
+
+
+@pytest.mark.parametrize("scenario", ["zipf", "diurnal", "multi_tenant"])
+def test_scheduler_conservation_on_scenarios(setup, scenario):
+    """The acceptance bar: on a full continuous-batching replay the
+    ledger total equals both stall definitions to 1e-9 relative."""
+    from repro.serving.engine import DecodeEngine
+    from repro.serving.scheduler import (ContinuousScheduler,
+                                         jobs_from_trace)
+    cfg, rules, params = setup
+    clock = VirtualClock()
+    store = TieredStore(_pinned_flash(), clock=clock)
+    eng = DecodeEngine(cfg, params, rules, max_slots=4, max_len=64,
+                       store=store, clock=clock, step_time=0.25)
+    sched = ContinuousScheduler(eng, pause_idle_steps=0, prefetch_lead=0)
+    jobs = jobs_from_trace(scenario, n_jobs=6, n_turns=3,
+                           tokens_per_turn=5, horizon=72)
+    report = sched.run(jobs)
+    led = report["stall_ledger"]
+    assert set(led) == set(COMPONENTS) | {"total"}
+    rhs = eng.kv_stall_time + eng.step_time * report["slot_idle_steps"]
+    assert _rel_err(led["total"], rhs) <= REL_TOL
+    assert _rel_err(led["total"], report["per_token_stall"]
+                    * max(report["tokens"], 1)) <= REL_TOL
+    assert led["scheduler_idle"] > 0
+    # restores did stall (the scenario is not prefetch-hidden)
+    assert led["total"] - led["scheduler_idle"] > 0
+
+
+def test_scheduler_ledger_is_delta_on_shared_fleet_ledger(setup):
+    """A scheduler built on a store whose ledger already carries stall
+    reports only its own slice (delta since construction)."""
+    from repro.serving.engine import DecodeEngine
+    from repro.serving.scheduler import (ContinuousScheduler,
+                                         jobs_from_trace)
+    cfg, rules, params = setup
+    clock = VirtualClock()
+    store = TieredStore(_pinned_flash(), clock=clock)
+    store.ledger.add("flash_service", 123.0, "past")   # pre-existing
+    eng = DecodeEngine(cfg, params, rules, max_slots=4, max_len=64,
+                       store=store, clock=clock, step_time=0.25)
+    sched = ContinuousScheduler(eng, pause_idle_steps=0, prefetch_lead=0)
+    report = sched.run(jobs_from_trace("zipf", n_jobs=3, n_turns=2,
+                                       tokens_per_turn=4, horizon=24))
+    rhs = eng.kv_stall_time + eng.step_time * report["slot_idle_steps"]
+    assert _rel_err(report["stall_ledger"]["total"], rhs) <= REL_TOL
+
+
+# ---------------------------------------------------------------------------
+# Platform integration: ObservabilityDecl -> compiled plane
+# ---------------------------------------------------------------------------
+
+def _obs_spec(trace: bool):
+    from repro.platform import (HierarchySpec, HostDecl,
+                                ObservabilityDecl, PolicyDecl, TierDecl)
+    return HierarchySpec(
+        hosts=(HostDecl(count=2,
+                        tiers={"dram": TierDecl(1 << 22, 45e9, 5e-7)}),),
+        policy=PolicyDecl.economic(l_blk=4096),
+        observability=ObservabilityDecl(trace=trace))
+
+
+def test_observability_decl_validates_and_roundtrips():
+    from repro.platform import HierarchySpec, ObservabilityDecl
+    with pytest.raises(ValueError, match="max_events"):
+        ObservabilityDecl(max_events=0).validate()
+    spec = _obs_spec(trace=True)
+    spec.validate()
+    again = HierarchySpec.from_json(spec.to_json())
+    assert again.observability == spec.observability
+    assert again == spec
+
+
+def test_platform_compiles_shared_observability_plane():
+    from repro.platform.compiler import Platform
+    platform = Platform.compile(_obs_spec(trace=True))
+    assert platform.tracer is not None
+    assert platform.metrics is not None
+    # one ledger shared fleet-wide: the host view's IS the platform's
+    hv = platform.fabric.host_view(0)
+    assert hv.ledger is platform.ledger
+    assert "fabric" in platform.metrics.components()
+    assert "stall_ledger" in platform.metrics.components()
+    key = ("kv", "t/000")
+    platform.fabric.put(key, np.zeros(1024, np.float32),
+                        from_host=platform.fabric.owner(key))
+    snap = platform.snapshot_stats()
+    assert "fabric" in snap["components"]
+    platform.reset_stats()
+    assert platform.ledger.total() == 0.0
+
+
+def test_trace_export_is_byte_identical_across_runs():
+    """Two identical runs on the virtual clock must export identical
+    Perfetto bytes — the CI double-run gate in unit form."""
+    from repro.platform.compiler import Platform
+
+    def one_run() -> str:
+        platform = Platform.compile(_obs_spec(trace=True))
+        fab = platform.fabric
+        blob = np.zeros(4096, np.float32)
+        for i in range(8):
+            k = ("kv", f"t/{i:03d}")
+            fab.put(k, blob, from_host=fab.owner(k))
+        platform.clock.advance(1.0)
+        for i in range(8):
+            k = ("kv", f"t/{i:03d}")
+            fab.get(k, from_host=(fab.owner(k) + 1) % fab.n_hosts)
+        fab.drain()
+        return platform.tracer.to_chrome_json()
+
+    assert one_run() == one_run()
+
+
+def test_scale_replay_record_invariant_under_metrics(tmp_path):
+    """The 1M-key replay's modeled record must be byte-identical with
+    the metrics plane on and off — observing must never perturb."""
+    from repro.serving.scale import scale_replay
+    kw = dict(n_keys=2000, n_sessions=400, n_steps=6,
+              accesses_per_step=500, n_hosts=2, seed=3)
+    rec_off, t_off = scale_replay(**kw, obs=None)
+    obs = Observability()
+    rec_on, t_on = scale_replay(**kw, obs=obs)
+    assert bench_json(rec_off) == bench_json(rec_on)
+    assert "metrics" in t_on and t_on["metrics"] >= 0.0
+    assert obs.metrics.counter("scale_accesses").value() \
+        == rec_on["accesses"]
+    # the replay's modeled stall lands in the ledger's flash component
+    assert obs.ledger.totals["flash_service"] == pytest.approx(
+        rec_on["total_stall"])

@@ -336,6 +336,22 @@ def test_isolation_headline_holds(setup):
         > report["gated"]["tau_be"]["scan"]
     assert report["shared"]["tau_be"]["premium"] \
         == report["shared"]["tau_be"]["scan"]
+    # Eq. 1 stall-ledger conservation on every arm: the ledger total
+    # equals kv stall + slot-idle rent to 1e-9 relative, and the slice
+    # attributed to named tenants never exceeds the non-idle total
+    from repro.serving.tenants import STEP_TIME
+    for arm in ("gated", "shared", "no_adversary"):
+        m = report[arm]["report"]
+        led = m["stall_ledger"]
+        rhs = m["kv_stall"] + STEP_TIME * m["slot_idle_steps"]
+        assert abs(led["total"] - rhs) <= 1e-9 * max(rhs, 1e-30), arm
+        tenant_slice = sum(c["ledger_stall"]
+                           for c in m["tenants"].values())
+        assert tenant_slice <= led["total"] - led["scheduler_idle"] \
+            + 1e-12, arm
+    # the shared arm's premium violation is visible as budget burn > 1
+    # in the same currency the verdicts use
+    assert "budget_burn" in report["shared"]["report"]["tenants"]["premium"]
     # JSON-stable: the report round-trips through json bytes unchanged
     blob = json.dumps(report, sort_keys=True)
     assert json.loads(blob) == json.loads(
