@@ -1,6 +1,6 @@
 """Provisioning advisor — the paper's §V framework as a CLI.
 
-Two modes:
+Three modes:
 
 * **analytic** (default): given an *assumed* log-normal workload (size,
   throughput, locality, block size, latency SLO) and a platform, report
@@ -11,10 +11,18 @@ Two modes:
   break-even-gated TieredStore and run the `autopilot.ProvisionAdvisor`
   on what the runtime *measured* — per-class reuse histograms, tier
   stats — instead of an assumed distribution.
+* **four-arm tiers** (`--advise-tiers`, composes with `--trace`): feed
+  the trace's reuse intervals to `advise_tiers` and print the Eq. 1
+  four-arm comparison — 3-tier baseline vs `+gpu_flash` (BaM-style
+  GPU-direct flash: no host-CPU per-IO rent) vs `+pool` (fleet
+  far-memory at `--rent-factor` x DRAM rent for the
+  `[tau_be, tau_pool)` band) vs both — and the cheapest shape.
 
   PYTHONPATH=src python examples/provision_advisor.py \\
       --platform gpu --l-blk 512 --throughput-gbs 200 --tail-us 13
   PYTHONPATH=src python examples/provision_advisor.py --trace scan_flood
+  PYTHONPATH=src python examples/provision_advisor.py --advise-tiers \\
+      --trace diurnal --rent-factor 0.25
 """
 import argparse
 import sys
@@ -57,6 +65,38 @@ def run_live(args):
     print(f"\n  VERDICT: {adv['verdict']}")
 
 
+def run_advise_tiers(args):
+    from repro.autopilot.advisor import ProvisionAdvisor
+    from repro.autopilot.gate import default_classify
+    from repro.autopilot.reuse import ReuseTracker
+    from repro.autopilot.traces import SCENARIOS, generate
+    from repro.core import CPU_DDR, GPU_GDDR, storage_next_ssd
+
+    scenario = args.trace or "diurnal"
+    if scenario not in SCENARIOS:
+        sys.exit(f"--trace must be one of {SCENARIOS}")
+    l_blk = int(args.obj_kib * 1024)
+    trace = generate(scenario, n_steps=args.steps, seed=0)
+    tracker = ReuseTracker()
+    now = 0.0
+    for step in trace.steps:
+        for key in step:
+            tracker.observe(key, default_classify(key), now)
+        now += trace.step_time
+    horizon = max(now, 1e-9)
+    host = GPU_GDDR if args.platform == "gpu" else CPU_DDR
+    advisor = ProvisionAdvisor(host, storage_next_ssd(), l_blk)
+    advice = advisor.advise_tiers(
+        tracker,
+        access_rate=trace.accesses / horizon,
+        resident_bytes=len(trace.distinct_keys()) * l_blk,
+        pool_bw=args.pool_bw, pool_rtt=args.pool_rtt,
+        rent_factor=args.rent_factor)
+    print(f"scenario: {scenario} ({trace.accesses} accesses, "
+          f"{horizon:.1f}s modeled) — four-arm hierarchy comparison")
+    print(advice.report())
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--platform", choices=("cpu", "gpu"), default="gpu")
@@ -77,8 +117,22 @@ def main():
                     help="live mode: object size in KiB (distinct from "
                          "--l-blk, which is the analytic mode's block "
                          "size in bytes)")
+    ap.add_argument("--advise-tiers", action="store_true",
+                    help="four-arm mode: price baseline / +gpu_flash / "
+                         "+pool / both against the trace's measured "
+                         "reuse intervals (composes with --trace; "
+                         "default scenario: diurnal)")
+    ap.add_argument("--pool-bw", type=float, default=40e9,
+                    help="four-arm mode: pool fabric bandwidth, B/s")
+    ap.add_argument("--pool-rtt", type=float, default=2e-6,
+                    help="four-arm mode: pool fabric round-trip, s")
+    ap.add_argument("--rent-factor", type=float, default=0.25,
+                    help="four-arm mode: pool rent as a fraction of "
+                         "local DRAM rent")
     args = ap.parse_args()
 
+    if args.advise_tiers:
+        return run_advise_tiers(args)
     if args.trace:
         return run_live(args)
 

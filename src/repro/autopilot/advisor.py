@@ -23,7 +23,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from ..core.economics import HostConfig, break_even_for_ssd
+from ..core.economics import (HostConfig, break_even_for_ssd,
+                              pool_flash_crossover)
 from ..core.ssd_model import SsdConfig, iops_ssd_peak
 from ..core.workload import EmpiricalWorkload, thresholds
 from ..core.policy import Tier
@@ -138,6 +139,56 @@ class AvailabilityAdvice:
                 f"(rent={row['rent']:.2e} write={row['write']:.2e} "
                 f"repair={row['repair']:.2e} loss={row['loss']:.2e})"
                 f"{tag}")
+        lines.append(f"VERDICT: {self.verdict}")
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass
+class TierAdvice:
+    """Fourth-tier recommendation: which hierarchy shape to deploy.
+
+    `arms` maps each candidate shape to its modeled miss-path cost rate
+    (NAND-die-normalized $ per second — DRAM rent for the locally-hot
+    set is identical across arms and omitted):
+
+      * baseline  — 3 tiers; every DRAM miss is a host-CPU flash IO
+      * gpu_flash — misses ride the BaM submission engine (no host-CPU
+                    or host-DRAM-wire rent, deeper device queue)
+      * pool      — the pool band (tau_be <= interval < tau_pool) moves
+                    to the fleet pool at discounted rent + an RTT lane;
+                    the rest stays on the host flash path
+      * both      — pool band pooled, residual misses gpu-direct
+
+    Each row: io (wire + media + host/submit $), pool_rent (discounted
+    DRAM-class rent on pooled bytes), stall (alpha_stall x modeled
+    stall seconds), total, and stall_seconds (unpriced, per second of
+    serving — the bench's equal-or-lower-stall check reads this).
+    """
+    tau_be: float
+    tau_pool: float
+    access_rate: float
+    resident_bytes: float
+    miss_fraction: float            # accesses priced out of local DRAM
+    pool_band_fraction: float       # fraction of *misses* in the band
+    arms: Dict[str, Dict[str, float]]
+    recommended_arm: str
+    verdict: str
+
+    def as_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    def report(self) -> str:
+        lines = [f"tau_be={self.tau_be:.3f}s  tau_pool={self.tau_pool:.3f}s"
+                 f"  miss={self.miss_fraction*100:.1f}%  "
+                 f"pool band={self.pool_band_fraction*100:.1f}% of misses"]
+        for arm in ("baseline", "gpu_flash", "pool", "both"):
+            row = self.arms[arm]
+            tag = " <- recommended" if arm == self.recommended_arm else ""
+            lines.append(
+                f"  {arm:9s}: total={row['total']:.3e}/s  "
+                f"(io={row['io']:.2e} rent={row['pool_rent']:.2e} "
+                f"stall={row['stall']:.2e}; "
+                f"{row['stall_seconds']*1e3:.3f}ms stall/s){tag}")
         lines.append(f"VERDICT: {self.verdict}")
         return "\n".join(lines)
 
@@ -399,6 +450,125 @@ class ProvisionAdvisor:
             resident_bytes=float(resident_bytes), n_hosts=n_hosts,
             recommended_replicas=int(recommended), arms=arms,
             verdict=verdict)
+
+    # ------------------------------------------------------------ 4th tier
+    def advise_tiers(self, tracker: Optional[ReuseTracker] = None, *,
+                     access_rate: float, resident_bytes: float,
+                     object_bytes: Optional[float] = None,
+                     interval_samples: Optional[np.ndarray] = None,
+                     pool_bw: float = 40e9, pool_rtt: float = 2e-6,
+                     rent_factor: float = 0.5, alpha_net: float = 2.0,
+                     alpha_submit: float = 0.5, iops_submit: float = 2e7,
+                     submit_latency: float = 3e-6,
+                     alpha_stall: float = 4.0,
+                     flash_fetch_seconds: Optional[float] = None,
+                     gpu_fetch_seconds: Optional[float] = None,
+                     max_samples: int = 256) -> TierAdvice:
+        """Price the four hierarchy shapes (3-tier baseline, +gpu_flash,
+        +pool, +both) against the measured reuse-interval distribution
+        and recommend the cheapest.
+
+        The split is Eq. 1 run per column: accesses whose tracked
+        interval clears tau_be stay local-DRAM (identical across arms,
+        not priced); the rest are the miss stream. Within it, intervals
+        under the pool column's tau_pool earn the pool's discounted
+        rent instead of a flash IO; gpu_flash reprices the *residual*
+        flash IOs by dropping the host-CPU and host-DRAM-wire rent for
+        a submission-engine charge. Stall seconds are priced at
+        `alpha_stall` exactly like the AI-era tau_be correction.
+
+        Pass `tracker=` for live distributions, or `interval_samples=`
+        directly (the tiers bench replays its measured intervals)."""
+        if access_rate < 0 or resident_bytes < 0:
+            raise ValueError("rates and bytes must be non-negative")
+        if (tracker is None) == (interval_samples is None):
+            raise ValueError(
+                "pass exactly one of tracker= or interval_samples=")
+        b = float(object_bytes if object_bytes is not None else self.l_blk)
+        if interval_samples is None:
+            parts = [tracker.interval_samples(cls, max_samples=max_samples)
+                     for cls in tracker.classes]
+            parts = [p for p in parts if p.size]
+            samples = (np.concatenate(parts) if parts
+                       else np.empty(0))
+        else:
+            samples = np.asarray(interval_samples, dtype=float)
+
+        tau_pool = float(pool_flash_crossover(
+            self.host, self.l_blk, self.tau_be, pool_bw=pool_bw,
+            pool_rtt=pool_rtt, rent_factor=rent_factor,
+            alpha_net=alpha_net))
+        if samples.size:
+            miss = float(np.mean(samples >= self.tau_be))
+            band = float(np.mean((samples >= self.tau_be)
+                                 & (samples < tau_pool)))
+        else:
+            miss, band = 1.0, 0.0       # no evidence: everything cold
+        p_band = band / miss if miss > 0 else 0.0
+
+        # modeled demand-fetch times from the calibrated queue models
+        # (lazy: runtime imports autopilot at package load)
+        from ..runtime.service import GpuDirectQueueModel, SsdQueueModel
+        ssd_q = SsdQueueModel.shared()
+        if flash_fetch_seconds is None:
+            flash_fetch_seconds = float(ssd_q.service(b, 1).total)
+        if gpu_fetch_seconds is None:
+            gpu_fetch_seconds = float(GpuDirectQueueModel(
+                ssd_q, submit_latency=submit_latency).service(b, 1).total)
+        pool_fetch_seconds = b / pool_bw + pool_rtt
+
+        from .bench import PAGE_BYTES, pricing_rates
+        rates = pricing_rates(self.host, self.ssd)
+        page_per_byte = rates["page_io_cost"] / PAGE_BYTES
+        # per-access $ on each miss path (host/submit + wire + media)
+        flash_access = (rates["host_io_cost"]
+                        + rates["dram_wire_rate"] * b + page_per_byte * b)
+        gpu_access = alpha_submit / iops_submit + page_per_byte * b
+        pool_access = alpha_net * pool_fetch_seconds
+        pool_rent = (resident_bytes * band * rates["rent_rate"]
+                     * rent_factor)
+        miss_rate = access_rate * miss
+
+        def _arm(residual: float, residual_fetch: float,
+                 has_pool: bool) -> Dict[str, float]:
+            frac = p_band if has_pool else 0.0
+            io = miss_rate * ((1.0 - frac) * residual
+                              + frac * pool_access)
+            stall_s = miss_rate * ((1.0 - frac) * residual_fetch
+                                   + frac * pool_fetch_seconds)
+            rent = pool_rent if has_pool else 0.0
+            stall = alpha_stall * stall_s
+            return {"io": float(io), "pool_rent": float(rent),
+                    "stall": float(stall), "stall_seconds": float(stall_s),
+                    "total": float(io + rent + stall)}
+
+        arms = {
+            "baseline": _arm(flash_access, flash_fetch_seconds, False),
+            "gpu_flash": _arm(gpu_access, gpu_fetch_seconds, False),
+            "pool": _arm(flash_access, flash_fetch_seconds, True),
+            "both": _arm(gpu_access, gpu_fetch_seconds, True),
+        }
+        order = ("baseline", "gpu_flash", "pool", "both")
+        recommended = min(order, key=lambda a: (arms[a]["total"],
+                                                order.index(a)))
+        if recommended == "baseline":
+            verdict = ("keep 3 tiers: at this reuse mix neither the BaM "
+                       "path nor pooled rent beats host flash IO")
+        elif recommended == "gpu_flash":
+            verdict = ("add gpu_flash: host-CPU IO rent dominates the "
+                       "miss stream; the submission engine removes it")
+        elif recommended == "pool":
+            verdict = ("add the fleet pool: the pool band's discounted "
+                       "rent underprices its flash re-reads")
+        else:
+            verdict = ("add both: pool the reuse band, ride the BaM "
+                       "path for the cold residual")
+        return TierAdvice(
+            tau_be=float(self.tau_be), tau_pool=tau_pool,
+            access_rate=float(access_rate),
+            resident_bytes=float(resident_bytes),
+            miss_fraction=miss, pool_band_fraction=float(p_band),
+            arms=arms, recommended_arm=recommended, verdict=verdict)
 
     def _verdict(self, limit: str, target: float, dram_cap: float,
                  hosts: int, cur_hosts: int) -> str:

@@ -60,6 +60,8 @@ def default_classify(key) -> str:
 class GateStats:
     admits_dram: int = 0        # admitted under break-even
     admits_flash: int = 0       # priced out (or unknown, cold default)
+    admits_pool: int = 0        # priced out of DRAM but under tau_pool
+    admits_gpu_flash: int = 0   # cold admits routed to the BaM path
     readmits_measured: int = 0  # ghost supplied a measured interval
     prior_decisions: int = 0    # first touch priced by the class sketch
     cold_defaults: int = 0      # first touch with no class evidence
@@ -73,7 +75,9 @@ class EconomicGate(TieringPolicy):
                  classify: Callable[[object], str] = default_classify,
                  prior_quantile: float = 0.5,
                  hysteresis: float = 0.25, ema_alpha: float = 0.2,
-                 class_tau_be: Optional[Dict[str, float]] = None):
+                 class_tau_be: Optional[Dict[str, float]] = None,
+                 tau_pool: Optional[float] = None,
+                 gpu_direct: bool = False):
         super().__init__(tau_hot=tau_hot, tau_be=tau_be,
                          hysteresis=hysteresis, ema_alpha=ema_alpha)
         self.tracker = tracker or ReuseTracker()
@@ -91,6 +95,17 @@ class EconomicGate(TieringPolicy):
         # alpha_stall folds into its own tau_be (see `breakeven_tau`);
         # classes not listed fall back to the fleet-wide threshold
         self.class_tau_be = dict(class_tau_be) if class_tau_be else None
+        # fourth-tier thresholds. tau_pool bounds the pool band: an
+        # object priced out of local DRAM (est >= tau_be) but reused
+        # faster than tau_pool earns the fleet pool's discounted rent;
+        # slower goes to flash. gpu_direct routes gate-cold admissions
+        # to the BaM path (GPU_FLASH) — same media, no host-CPU rent.
+        if tau_pool is not None and tau_pool <= tau_be:
+            raise ValueError(
+                "tau_pool must exceed tau_be: the pool band sits "
+                "between local DRAM and flash in the reuse spectrum")
+        self.tau_pool = tau_pool
+        self.gpu_direct = bool(gpu_direct)
 
     def tau_for(self, key) -> float:
         """Break-even threshold governing `key`: its class's declared
@@ -153,6 +168,15 @@ class EconomicGate(TieringPolicy):
         # an explicit colder request (setup pinning data to flash) wins;
         # the gate only ever *demotes* relative to the caller's ask
         decided = Tier(max(decided, requested))
+        # gate-cold admissions ride the BaM path when the host has one:
+        # same flash media, but the submission engine replaces the
+        # host-CPU/host-DRAM IO path (the dropped Eq. 1 rent terms). An
+        # explicit FLASH pin stays FLASH — spills and restores are not
+        # gate decisions.
+        if (decided == Tier.FLASH and self.gpu_direct
+                and requested != Tier.FLASH):
+            decided = Tier.GPU_FLASH
+            st.admits_gpu_flash += 1
         self._tier[key] = decided
         # priced out = the gate denied a warmer ask; a flash-pinned put
         # was never a decision and must not bill restores to the gate
@@ -171,6 +195,24 @@ class EconomicGate(TieringPolicy):
                             "requested": requested.name,
                             "decided": decided.name})
         return decided
+
+    def pool_admit(self, key, requested: Tier, now: float) -> bool:
+        """Fleet-pool admission (the fabric asks before host placement):
+        True iff the tracked estimate prices out of *local* DRAM rent
+        but clears the pool column's wider tau — the band where the
+        pool's discounted rent beats both DRAM rent and a flash IO.
+        Cold keys (no evidence) and explicit flash pins never pool."""
+        if self.tau_pool is None:
+            return False
+        if requested >= Tier.FLASH:
+            return False
+        est, _ = self._estimate(key, now)
+        if est is None or est < self.tau_for(key):
+            return False
+        if est < self.tau_pool:
+            self.gate_stats.admits_pool += 1
+            return True
+        return False
 
     def priced_out(self, key) -> bool:
         """Did this gate's last admission decision for `key` deny a

@@ -33,9 +33,20 @@ from .ssd_model import iops_ssd_peak
 
 
 class Tier(enum.IntEnum):
+    """Placement tiers, ordered coldward.
+
+    The first three are the classic per-host hierarchy. ``GPU_FLASH``
+    is the BaM-style accelerator-direct flash path (same NAND, its own
+    submission queue, no host-DRAM bounce — a *path*, not a medium) and
+    ``POOL`` is the fleet-shared far-memory pool. Stores that predate
+    the fourth tier iterate their own configured spec keys, never
+    ``for t in Tier``, so adding members here does not change their
+    behavior."""
     HBM = 0
     DRAM = 1
     FLASH = 2
+    GPU_FLASH = 3
+    POOL = 4
 
 
 @dataclasses.dataclass

@@ -30,6 +30,13 @@ Components (the Eq. 1 decomposition):
                            EconomicGate priced out of DRAM (the cost
                            of an admission decision, not of the media)
   * ``scheduler_idle``   — decode slots empty while work was pending
+  * ``pool_rtt``         — far-memory pool lane seconds: the per-host
+                           RTT + fabric-bandwidth lane to the shared
+                           pool (the price of pooled DRAM's distance)
+  * ``gpu_direct_service``— BaM-style GPU-direct flash path: device
+                           service through the accelerator submission
+                           queue (no host bounce, so none of these
+                           seconds ever appear under ``flash_service``)
   * ``other``            — DRAM/HBM residuals and anything a future
                            lane adds before it is classified; keeping
                            a catch-all is what makes conservation
@@ -45,7 +52,8 @@ from __future__ import annotations
 from typing import Dict, Optional
 
 COMPONENTS = ("flash_service", "nic_queue", "incast", "interference",
-              "gate_miss_restore", "scheduler_idle", "other")
+              "gate_miss_restore", "scheduler_idle", "pool_rtt",
+              "gpu_direct_service", "other")
 
 
 class StallLedger:

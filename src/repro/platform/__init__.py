@@ -21,8 +21,9 @@ from .handles import Handle, KvSession  # noqa: F401
 from .roofline_hook import measured_step_time  # noqa: F401
 from .spec import (ArrivalDecl, AutoscaleDecl,  # noqa: F401
                    HierarchySpec, HostDecl, NetDecl, ObservabilityDecl,
-                   PolicyDecl, SchedulerDecl, SessionShapeDecl, SloDecl,
-                   TenantDecl, TierDecl, TopologyDecl, WorkloadDecl)
+                   PolicyDecl, PoolDecl, SchedulerDecl, SessionShapeDecl,
+                   SloDecl, TenantDecl, TierDecl, TopologyDecl,
+                   WorkloadDecl, gpu_flash_tier)
 from .workload import (CompiledWorkload, compile_workload,  # noqa: F401
                        tenant_classifier)
 
@@ -30,10 +31,10 @@ __all__ = [
     "ArrivalDecl", "AutoscaleDecision", "AutoscaleDecl", "Autoscaler",
     "CompiledWorkload", "Handle", "HierarchySpec", "HostDecl",
     "KvSession", "NetDecl", "ObservabilityDecl", "Platform",
-    "PolicyDecl", "SchedulerDecl",
+    "PolicyDecl", "PoolDecl", "SchedulerDecl",
     "SessionShapeDecl", "SloDecl", "TenantDecl", "TierDecl",
     "TopologyDecl", "WorkloadDecl",
-    "compile_workload", "default_autoscale_spec",
+    "compile_workload", "default_autoscale_spec", "gpu_flash_tier",
     "default_failover_spec", "measured_step_time",
     "run_autoscale_bench", "run_failover_bench", "tenant_classifier",
 ]

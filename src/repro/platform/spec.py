@@ -43,16 +43,21 @@ from ..runtime.tiers import TierSpec
 
 SPEC_VERSION = 1
 
-_TIER_NAMES = {"hbm": Tier.HBM, "dram": Tier.DRAM, "flash": Tier.FLASH}
+_TIER_NAMES = {"hbm": Tier.HBM, "dram": Tier.DRAM, "flash": Tier.FLASH,
+               "gpu_flash": Tier.GPU_FLASH}
 _HOST_PROFILES: Dict[str, HostConfig] = {"cpu": CPU_DDR, "gpu": GPU_GDDR}
 
 # the TieredStore defaults (v5e-host-like HBM/DRAM + Storage-Next SSD);
-# a HostDecl that omits a tier inherits the matching row
+# a HostDecl that omits a tier inherits the matching row. "gpu_flash"
+# is intentionally absent: the BaM tier exists only when declared (its
+# default geometry below mirrors the flash row — same media, different
+# access path), so 3-tier hosts compile bit-identically
 _DEFAULT_TIERS: Dict[str, Tuple[float, float, float]] = {
     "hbm": (16e9, 819e9, 1e-7),
     "dram": (128e9, 45e9, 5e-7),
     "flash": (4e12, 7e9, 2e-5),
 }
+_GPU_FLASH_DEFAULT: Tuple[float, float, float] = (4e12, 7e9, 2e-5)
 
 
 def _err(path: str, msg: str) -> ValueError:
@@ -61,10 +66,13 @@ def _err(path: str, msg: str) -> ValueError:
 
 @dataclasses.dataclass(frozen=True)
 class TierDecl:
-    """One tier's geometry on one host."""
+    """One tier's geometry on one host. `write_bw` declares an
+    asymmetric write path; None inherits `read_bw` (and is omitted from
+    the JSON form, so pre-existing specs stay byte-identical)."""
     capacity_bytes: float
     read_bw: float
     read_latency: float
+    write_bw: Optional[float] = None
 
     def validate(self, path: str):
         if not self.capacity_bytes > 0:
@@ -77,6 +85,19 @@ class TierDecl:
         if self.read_latency < 0:
             raise _err(path, f"read_latency must be >= 0 s (got "
                              f"{self.read_latency!r})")
+        if self.write_bw is not None and not self.write_bw > 0:
+            raise _err(path, f"write_bw must be > 0 B/s when given "
+                             f"(got {self.write_bw!r}); omit it to "
+                             f"inherit read_bw")
+
+
+def gpu_flash_tier(**kw) -> TierDecl:
+    """A BaM-style GPU-direct flash tier at the default flash geometry
+    (same media as the host flash row, different access path); override
+    any field via keywords."""
+    cap, bw, lat = _GPU_FLASH_DEFAULT
+    return TierDecl(**{**dict(capacity_bytes=cap, read_bw=bw,
+                              read_latency=lat), **kw})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,16 +129,25 @@ class HostDecl:
             else _DEFAULT_TIERS["dram"][0]
 
     def tier_specs(self) -> Optional[Dict[Tier, TierSpec]]:
-        """Compiled per-host TierSpec dict; None when fully default."""
+        """Compiled per-host TierSpec dict; None when fully default.
+        The three base tiers always compile (omitted ones inherit the
+        defaults); "gpu_flash" compiles only when declared — a store
+        never grows the BaM lane implicitly."""
         if not self.tiers:
             return None
         out: Dict[Tier, TierSpec] = {}
         for name, (cap, bw, lat) in _DEFAULT_TIERS.items():
             decl = self.tiers.get(name)
+            wbw = None
             if decl is not None:
-                cap, bw, lat = (decl.capacity_bytes, decl.read_bw,
-                                decl.read_latency)
-            out[_TIER_NAMES[name]] = TierSpec(cap, bw, lat)
+                cap, bw, lat, wbw = (decl.capacity_bytes, decl.read_bw,
+                                     decl.read_latency, decl.write_bw)
+            out[_TIER_NAMES[name]] = TierSpec(cap, bw, lat, write_bw=wbw)
+        decl = self.tiers.get("gpu_flash")
+        if decl is not None:
+            out[Tier.GPU_FLASH] = TierSpec(
+                decl.capacity_bytes, decl.read_bw, decl.read_latency,
+                write_bw=decl.write_bw)
         return out
 
 
@@ -194,6 +224,49 @@ class PolicyDecl:
     def economics(self) -> Tuple[HostConfig, SsdConfig]:
         return (_HOST_PROFILES[self.host_profile],
                 storage_next_ssd(NAND_TYPES[self.nand]))
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolDecl:
+    """The fleet-shared disaggregated far-memory pool
+    (`runtime.pool.PooledStore`): one DRAM-class slab every host
+    reaches over a per-host RTT lane, rented at `rent_factor` of the
+    local DRAM rate (statistical multiplexing of uncorrelated per-host
+    peaks pays the discount). The compiler wires the pool into the
+    fabric (gate-admitted between local-DRAM miss and remote-flash
+    fetch) and prices its Eq. 1 column from these numbers."""
+    capacity_bytes: float
+    read_bw: float = 40e9
+    write_bw: Optional[float] = None
+    rtt: float = 2e-6
+    sat_depth: int = 4
+    rent_factor: float = 0.5
+    alpha_net: float = 2.0
+
+    def validate(self, path: str = "pool"):
+        if not self.capacity_bytes > 0:
+            raise _err(path, f"capacity_bytes must be > 0 (got "
+                             f"{self.capacity_bytes!r})")
+        if not self.read_bw > 0:
+            raise _err(path, f"read_bw must be > 0 B/s (got "
+                             f"{self.read_bw!r})")
+        if self.write_bw is not None and not self.write_bw > 0:
+            raise _err(path, f"write_bw must be > 0 B/s when given "
+                             f"(got {self.write_bw!r}); omit it to "
+                             f"inherit read_bw")
+        if self.rtt < 0:
+            raise _err(path, f"rtt must be >= 0 s (got {self.rtt!r})")
+        if self.sat_depth < 1:
+            raise _err(path, f"sat_depth must be >= 1 (got "
+                             f"{self.sat_depth})")
+        if not 0.0 < self.rent_factor < 1.0:
+            raise _err(path, f"rent_factor must be in (0, 1) (got "
+                             f"{self.rent_factor!r}): 0 rents the pool "
+                             f"for free, 1 at the full local-DRAM rate "
+                             f"— neither is a pool")
+        if self.alpha_net <= 0:
+            raise _err(path, f"alpha_net must be positive (got "
+                             f"{self.alpha_net!r})")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -567,6 +640,7 @@ class HierarchySpec:
     weights: Optional[Tuple[float, ...]] = None
     topology: Optional[TopologyDecl] = None
     net: Optional[NetDecl] = None
+    pool: Optional[PoolDecl] = None
     clock: str = "virtual"                  # virtual | wall
     t0: float = 0.0
     step_time: Union[float, str] = 0.0      # seconds | "measured"
@@ -627,6 +701,11 @@ class HierarchySpec:
             self.topology.validate()
         if self.net is not None:
             self.net.validate()
+        if self.pool is not None:
+            if not isinstance(self.pool, PoolDecl):
+                raise _err("pool", f"expected PoolDecl, got "
+                                   f"{type(self.pool).__name__}")
+            self.pool.validate()
         if self.clock not in ("virtual", "wall"):
             raise _err("clock", f"unknown clock source {self.clock!r}; "
                        f"one of ('virtual', 'wall')")
@@ -727,6 +806,14 @@ class HierarchySpec:
                 "'economic' or 'static') to make the spec round-trip")
         d = dataclasses.asdict(self)
         d["version"] = SPEC_VERSION
+        # inherit-markers are omitted, not serialized as null, so specs
+        # written before the field existed stay byte-identical
+        if d.get("pool") is None:
+            d.pop("pool", None)
+        for h in d.get("hosts", []):
+            for t in h.get("tiers", {}).values():
+                if t.get("write_bw") is None:
+                    t.pop("write_bw", None)
         return json.dumps(d, sort_keys=True, indent=indent)
 
     @classmethod
@@ -763,6 +850,8 @@ class HierarchySpec:
             else None
         net = d.pop("net", None)
         net = NetDecl(**net) if net is not None else None
+        pool = d.pop("pool", None)
+        pool = PoolDecl(**pool) if pool is not None else None
         autoscale = d.pop("autoscale", None)
         autoscale = AutoscaleDecl(**autoscale) if autoscale is not None \
             else AutoscaleDecl()
@@ -777,8 +866,9 @@ class HierarchySpec:
             if workload is not None else None
         weights = d.pop("weights", None)
         spec = cls(hosts=hosts, policy=policy, topology=topology,
-                   net=net, autoscale=autoscale, scheduler=scheduler,
-                   observability=observability, workload=workload,
+                   net=net, pool=pool, autoscale=autoscale,
+                   scheduler=scheduler, observability=observability,
+                   workload=workload,
                    weights=tuple(weights) if weights is not None
                    else None, **d)
         return spec.validate()

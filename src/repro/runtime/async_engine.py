@@ -38,7 +38,8 @@ from typing import Dict, List, Optional
 from ..core.policy import Tier
 from ..obs.ledger import StallLedger, tenant_of_key
 from .clock import ensure_clock
-from .service import FixedLatencyModel, Service, SsdQueueModel
+from .service import (FixedLatencyModel, GpuDirectQueueModel, Service,
+                      SsdQueueModel)
 
 
 @dataclasses.dataclass
@@ -93,6 +94,13 @@ class AsyncTierRuntime:
             # flash service always derives from the ssdsim queueing
             # engine unless the caller explicitly injected a model
             service_models[Tier.FLASH] = SsdQueueModel.shared(sim_cfg)
+            if specs and Tier.GPU_FLASH in specs:
+                # the BaM-style path reuses the same calibrated NAND
+                # ladder behind an accelerator submission queue — a
+                # different lane on the same engine, never contending
+                # with the host-flash lane's queue
+                service_models[Tier.GPU_FLASH] = GpuDirectQueueModel(
+                    SsdQueueModel.shared(sim_cfg))
         self.models = service_models
         lanes = list(self.models)
         self._free: Dict[object, float] = {t: 0.0 for t in lanes}
@@ -110,6 +118,19 @@ class AsyncTierRuntime:
             ledger if ledger is not None
             else (obs.ledger if obs is not None else StallLedger()))
         self.label = label
+
+    # ----------------------------------------------------------------- lanes
+    def add_lane(self, lane, model) -> None:
+        """Register a new lane (key + service model) on a live runtime —
+        how the far-memory pool attaches a per-host lane when a host
+        joins the fleet. Re-registering an existing lane key is a
+        programming error (it would silently reset its queue)."""
+        if lane in self.models:
+            raise ValueError(f"lane {lane!r} already registered")
+        self.models[lane] = model
+        self._free[lane] = 0.0
+        self._inflight[lane] = []
+        self.qstats[lane] = QueueStats()
 
     # ----------------------------------------------------------------- time
     def now(self) -> float:
@@ -234,8 +255,16 @@ class AsyncTierRuntime:
             if tr.tier == Tier.FLASH:
                 lane_comp = ("gate_miss_restore" if tr.gate_miss
                              else "flash_service")
+            elif tr.tier == Tier.GPU_FLASH:
+                # the accelerator-direct path never rides the host
+                # flash lane, so none of its seconds may land under
+                # flash_service — its own Eq. 1 column
+                lane_comp = "gpu_direct_service"
             else:
                 lane_comp = "other"          # DRAM/HBM residuals
+        elif isinstance(tr.tier, tuple) and tr.tier \
+                and tr.tier[0] == "POOL":
+            lane_comp = "pool_rtt"           # per-host far-memory lanes
         else:
             lane_comp = "nic_queue"          # NIC (or future) lanes
         tenant = tenant_of_key(tr.key)

@@ -165,6 +165,78 @@ class NetQueueModel:
         return Service(occupancy=nbytes / eff_bw, latency=rtt)
 
 
+class PoolLaneModel:
+    """Per-host lane to the fleet-shared far-memory pool.
+
+    Same occupancy/latency split as `NetQueueModel` — fixed RTT, a
+    bandwidth share that ramps with in-flight depth — plus the write
+    asymmetry the pool's ingest path needs: pooled DRAM is behind a
+    fabric port whose egress (host reads) and ingress (host writes /
+    demotions into the pool) can be provisioned differently. Each
+    attached host owns one lane; occupancies serialize per lane in the
+    runtime while the RTT pipelines, so one host's demotion burst
+    queues on *its* lane without touching its neighbors'.
+    """
+
+    def __init__(self, rtt: float = 2e-6, read_bw: float = 40e9,
+                 write_bw: Optional[float] = None, sat_depth: int = 4):
+        if rtt < 0 or read_bw <= 0 or sat_depth < 1:
+            raise ValueError("invalid pool-lane parameters")
+        if write_bw is not None and write_bw <= 0:
+            raise ValueError("invalid pool-lane write bandwidth")
+        self.rtt = rtt
+        self.read_bw = read_bw
+        self.write_bw = read_bw if write_bw is None else write_bw
+        self.sat_depth = sat_depth
+
+    def service(self, nbytes: int, queue_depth: int,
+                write: bool = False) -> Service:
+        bw = self.write_bw if write else self.read_bw
+        d = max(1, min(int(queue_depth), self.sat_depth))
+        eff_bw = bw * (d / self.sat_depth)
+        return Service(occupancy=nbytes / eff_bw, latency=self.rtt)
+
+
+class GpuDirectQueueModel:
+    """BaM-style GPU-direct flash path over the calibrated flash ladder.
+
+    Same NAND as `SsdQueueModel` — the calibration is reused, not
+    re-run — but a different *path*: the accelerator's submission
+    engine enqueues straight into the device SQ from thousands of
+    threads, so the device sees a deep queue even when the logical
+    in-flight count is small. That is BaM's core performance claim and
+    it is what `boost_depth` models: the IOPS/latency ladder is read at
+    `max(queue_depth, boost_depth)`, i.e. the device always operates at
+    or past the depth where its internal parallelism saturates. On top
+    of the device service the path pays only a fixed submission latency
+    (`submit_latency`, a doorbell write + completion poll — no host
+    DRAM bounce, no host CPU in the loop).
+
+    The economics mirror: `break_even_components_gpu_direct` drops the
+    host-CPU and host-DRAM-wire terms from Eq. 1 for the same reason
+    this model never touches a host lane.
+    """
+
+    def __init__(self, ssd: "SsdQueueModel", *, boost_depth: int = 32,
+                 submit_latency: float = 3e-6):
+        if boost_depth < 1 or submit_latency < 0:
+            raise ValueError("invalid GPU-direct parameters")
+        self.ssd = ssd
+        self.boost_depth = boost_depth
+        self.submit_latency = submit_latency
+
+    def _depth(self, queue_depth: int) -> int:
+        return max(int(queue_depth), self.boost_depth)
+
+    def service(self, nbytes: int, queue_depth: int) -> Service:
+        base = self.ssd.service(nbytes, self._depth(queue_depth))
+        return Service(occupancy=base.occupancy,
+                       latency=base.latency + self.submit_latency)
+
+    def p99(self, queue_depth: int) -> float:
+        return self.ssd.p99(self._depth(queue_depth)) + self.submit_latency
+
+
 class SsdQueueModel:
     """Queue-depth-dependent flash service times from the ssdsim DES."""
 

@@ -76,6 +76,13 @@ class TierSpec:
     capacity_bytes: float
     read_bw: float              # bytes/s (for modeled latency accounting)
     read_latency: float         # seconds per access (fixed part)
+    # write-path bandwidth when asymmetric (flash program vs read, the
+    # pool's ingest lane); None inherits read_bw — the historic behavior
+    write_bw: Optional[float] = None
+
+    @property
+    def effective_write_bw(self) -> float:
+        return self.read_bw if self.write_bw is None else self.write_bw
 
 
 @dataclasses.dataclass
@@ -155,10 +162,16 @@ class TieredStore:
         self.obs = self.runtime.obs
         self.ledger = self.runtime.ledger
         self.label = self.runtime.label
+        # iteration order is the *configured* tier set, hot-to-cold —
+        # never `for t in Tier`: a store compiled without the fourth
+        # tier must behave bit-identically whether or not the enum has
+        # grown new members
+        self.tiers: Tuple[Tier, ...] = tuple(sorted(self.specs))
         self._data: Dict[Tier, Dict[object, np.ndarray]] = {
-            t: {} for t in Tier}
-        self._used = {t: 0 for t in Tier}
-        self.stats: Dict[Tier, TierStats] = {t: TierStats() for t in Tier}
+            t: {} for t in self.tiers}
+        self._used = {t: 0 for t in self.tiers}
+        self.stats: Dict[Tier, TierStats] = {
+            t: TierStats() for t in self.tiers}
         if write_shield_depth is not None and write_shield_depth < 1:
             raise ValueError("write_shield_depth must be >= 1 (a zero "
                              "threshold would shield forever)")
@@ -173,18 +186,20 @@ class TieredStore:
 
     # ----------------------------------------------------------------- util
     def tier_of(self, key) -> Optional[Tier]:
-        for t in Tier:
+        for t in self.tiers:
             if key in self._data[t]:
                 return t
         return None
 
     def used_bytes(self, tier: Tier) -> int:
-        return self._used[tier]
+        # .get: fleet-level callers sum over all Tier members; a tier
+        # this store does not configure (gpu_flash, pool) holds nothing
+        return self._used.get(tier, 0)
 
     def keys(self) -> List[object]:
         """All resident keys across tiers (hot-to-cold tier order)."""
         out: List[object] = []
-        for t in Tier:
+        for t in self.tiers:
             out.extend(self._data[t])
         return out
 
@@ -201,7 +216,7 @@ class TieredStore:
         their setup/warm-up phase so repetitions on a reused store don't
         inherit stale counters — the deferral counters in particular
         accumulate across reps otherwise."""
-        self.stats = {t: TierStats() for t in Tier}
+        self.stats = {t: TierStats() for t in self.tiers}
         self.runtime.reset_stats()
 
     def snapshot_stats(self) -> Dict[str, object]:
@@ -238,10 +253,15 @@ class TieredStore:
         cur = self.tier_of(key)
         if cur is None:
             raise KeyError(key)
-        for t in Tier:
+        for t in self.tiers:
             if t == cur:
                 self.stats[t].hits += 1
-            elif t < cur:
+            elif t < min(cur, Tier.FLASH):
+                # tiers warmer than the serving one record a miss; the
+                # min() keeps GPU_FLASH from charging FLASH a miss —
+                # they are parallel paths to the same NAND, not a
+                # warmer/colder pair (no-op for 3-tier stores, where
+                # cur never exceeds FLASH)
                 self.stats[t].misses += 1
         value = self._data[cur][key]
         tr = self.runtime.submit(cur, key, value.nbytes, kind="fetch",
@@ -273,7 +293,11 @@ class TieredStore:
         now = self.clock.now() if now is None else now
         want = self.policy.observe(pf.key, now=now)
         cur = self.tier_of(pf.key)
-        if cur is not None and want != cur:
+        if cur is not None and want != cur and not (
+                want == Tier.FLASH and cur == Tier.GPU_FLASH):
+            # a FLASH want is satisfied by GPU_FLASH residency: both are
+            # the same NAND, and shuttling between the two paths is
+            # never what the reuse interval asked for
             self._move(pf.key, cur, want)
         self.flush_deferred_writes()
 
@@ -463,10 +487,18 @@ class TieredStore:
     # ------------------------------------------------------------- capacity
     def _fit_tier(self, tier: Tier, nbytes: int) -> Tier:
         """First tier at or below `tier` whose capacity can hold the
-        object; raises if even the capacity tier cannot."""
-        for t in Tier:
-            if t >= tier and nbytes <= self.specs[t].capacity_bytes:
+        object; raises if even the capacity tier cannot. GPU_FLASH is
+        only ever an *explicit* destination — capacity overflow from
+        the warm tiers falls through to FLASH, never sideways into the
+        accelerator-direct namespace."""
+        for t in self.tiers:
+            if t < tier or (t == Tier.GPU_FLASH and tier != Tier.GPU_FLASH):
+                continue
+            if nbytes <= self.specs[t].capacity_bytes:
                 return t
+        if (tier == Tier.GPU_FLASH and Tier.FLASH in self.specs
+                and nbytes <= self.specs[Tier.FLASH].capacity_bytes):
+            return Tier.FLASH
         raise ValueError(
             f"object of {nbytes} bytes exceeds every tier's capacity")
 
@@ -477,7 +509,7 @@ class TieredStore:
         makes progress; the guard raise is defensive."""
         spec = self.specs[tier]
         while self._used[tier] + nbytes > spec.capacity_bytes \
-                and tier != Tier.FLASH:
+                and tier not in (Tier.FLASH, Tier.GPU_FLASH):
             victims = [k for k in self.policy.evict_candidates(
                            tier, now=self.clock.now())
                        if k in self._data[tier]]
@@ -517,7 +549,7 @@ class TieredStore:
     # ---------------------------------------------------------------- report
     def report(self) -> str:
         lines = []
-        for t in Tier:
+        for t in self.tiers:
             st = self.stats[t]
             lines.append(
                 f"{t.name:6s} used={self._used[t]/2**20:9.1f}MiB "

@@ -205,7 +205,7 @@ def test_oversized_put_demotes_straight_to_flash():
     store.put("huge", huge, tier=Tier.DRAM)
     assert store.tier_of("huge") == Tier.FLASH
     # no tier is overcommitted
-    for t in Tier:
+    for t in store.tiers:
         assert store.used_bytes(t) <= store.specs[t].capacity_bytes
 
 
@@ -221,7 +221,7 @@ def test_capacity_pressure_never_overcommits():
     store = _small_store()
     for i in range(12):                      # 12MiB through a 4MiB DRAM
         store.put(("o", i), np.ones(1 << 20, np.uint8), tier=Tier.DRAM)
-    for t in Tier:
+    for t in store.tiers:
         assert store.used_bytes(t) <= store.specs[t].capacity_bytes
     assert store.stats[Tier.FLASH].demotions > 0
     assert all(store.tier_of(("o", i)) is not None for i in range(12))
